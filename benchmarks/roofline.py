@@ -1,0 +1,191 @@
+"""Roofline analysis: combine dry-run cell + probe records into the
+three-term roofline table (EXPERIMENTS.md §Roofline).
+
+Methodology (see EXPERIMENTS.md §Dry-run for the caveat this fixes): XLA's
+HLO cost analysis counts a while-loop body ONCE, so scanned layer stacks
+under-report FLOPs/bytes/collectives by ~the layer count. The dry-run
+therefore also compiles reduced-depth *fully-unrolled probes* (k=2 and k=3
+pattern units; +tail probe for zamba2) whose cost deltas give exact
+per-pattern-unit terms:
+
+    unit      = probe(3) - probe(2)
+    base      = probe(2) - 2·unit
+    corrected = (base + units·unit + tail·tail_unit) × microbatches
+
+Two inner while-loops survive inside a pattern unit and are added back
+analytically (they cannot be unrolled at 32k–512k sequence length):
+  * the chunked-GLA state scan of Mamba2/mLSTM (state-carry einsums per
+    chunk), and
+  * the sLSTM time scan (per-step recurrent matmul).
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI.
+Terms are per-chip seconds (cost analysis of the SPMD module is
+per-device; collective bytes are per-device wire bytes).
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, Optional
+
+import numpy as np
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+CHIPS = 256
+
+
+def _key(r):
+    return (r["arch"], str(r["shape"]))
+
+
+def load(path: str):
+    with open(path) as f:
+        recs = json.load(f)
+    cells = {}
+    probes = {}
+    for r in recs:
+        if r["mesh"] != "pod-16x16":
+            continue
+        if "probe" in r:
+            probes.setdefault(_key(r), {})[r["probe"]] = r
+        else:
+            cells[_key(r)] = r
+    return cells, probes
+
+
+def _gla_addback(arch: str, shape_name: str, mode: str) -> Dict[str, float]:
+    """Analytic inner-scan terms (global; divided by CHIPS by caller)."""
+    from repro.configs import get_config
+    from repro.configs.base import ALL_SHAPES
+    cfg = get_config(arch)
+    shape = next(s for s in ALL_SHAPES if s.name == shape_name)
+    if cfg.ssm is None or shape.mode == "decode":
+        return {"flops": 0.0, "bytes": 0.0}
+    B, S = shape.global_batch, shape.seq_len
+    L = cfg.ssm.chunk
+    N = S // L
+    flops = bytes_ = 0.0
+    mult = 3.0 if mode == "train" else 1.0   # fwd + bwd + remat fwd
+    if cfg.family == "hybrid":               # mamba2
+        H = cfg.num_heads
+        Dk = cfg.ssm.state_dim
+        Dv = cfg.ssm.expand * cfg.d_model // H
+        n_layers = cfg.num_layers
+        body_flops = 2.0 * B * L * H * Dk * Dv + 3.0 * B * H * Dk * Dv
+        state_bytes = B * H * Dk * Dv * 4 * 2
+        flops = (N - 1) * body_flops * n_layers * mult
+        bytes_ = (N - 1) * state_bytes * n_layers * mult
+    elif cfg.family == "ssm":                # xlstm
+        H = cfg.num_heads
+        d_in = cfg.ssm.expand * cfg.d_model
+        Dh = d_in // H
+        n_mlstm = cfg.num_layers - cfg.num_layers // cfg.ssm.slstm_period
+        n_slstm = cfg.num_layers // cfg.ssm.slstm_period
+        body_flops = 2.0 * B * L * H * Dh * (Dh + 1) + 3.0 * B * H * Dh * (
+            Dh + 1)
+        state_bytes = B * H * Dh * (Dh + 1) * 4 * 2
+        flops += (N - 1) * body_flops * n_mlstm * mult
+        bytes_ += (N - 1) * state_bytes * n_mlstm * mult
+        # sLSTM: recurrent matmul per step
+        Dh_s = cfg.d_model // H
+        step_flops = 2.0 * B * H * Dh_s * 4 * Dh_s + 30.0 * B * H * Dh_s
+        step_bytes = B * H * Dh_s * 4 * 4 * 2
+        flops += (S - 1) * step_flops * n_slstm * mult
+        bytes_ += (S - 1) * step_bytes * n_slstm * mult
+    return {"flops": flops, "bytes": bytes_}
+
+
+def corrected_terms(arch: str, shape_name: str, cell: dict,
+                    probes: Dict[int, dict]) -> Optional[dict]:
+    """Probe-corrected per-device (flops, bytes, collective wire bytes)."""
+    from repro.launch import dryrun as dr
+    if not (2 in probes and 3 in probes
+            and probes[2]["ok"] and probes[3]["ok"]):
+        return None
+    counts = dr.pattern_counts(arch)
+    M = probes[2].get("microbatches_full", 1)
+
+    def term(field):
+        if field == "coll":
+            p2 = probes[2]["collectives"]["total_bytes"]
+            p3 = probes[3]["collectives"]["total_bytes"]
+            p5 = probes.get(5, {}).get("collectives", {}).get("total_bytes")
+        else:
+            p2, p3 = probes[2][field], probes[3][field]
+            p5 = probes.get(5, {}).get(field)
+        unit = max(p3 - p2, 0.0)
+        base = max(p2 - 2 * unit, 0.0)
+        tail_unit = max((p5 - p2), 0.0) if (
+            p5 is not None and counts["tail"]) else 0.0
+        tot = base + counts["units"] * unit + counts["tail"] * tail_unit
+        return tot * M
+
+    mode = ("train" if shape_name == "train_4k" else
+            "prefill" if shape_name == "prefill_32k" else "decode")
+    add = _gla_addback(arch, shape_name, mode)
+    return {
+        "flops": term("hlo_flops") + add["flops"] / CHIPS,
+        "bytes": term("hlo_bytes") + add["bytes"] / CHIPS,
+        "coll": term("coll"),
+    }
+
+
+def roofline_row(arch: str, shape_name: str, cell: dict,
+                 probes) -> dict:
+    corr = corrected_terms(arch, shape_name, cell, probes or {})
+    raw = {"flops": cell["hlo_flops"], "bytes": cell["hlo_bytes"],
+           "coll": cell["collectives"]["total_bytes"]}
+    use = corr or raw
+    t_compute = use["flops"] / PEAK_FLOPS
+    t_memory = use["bytes"] / HBM_BW
+    t_coll = use["coll"] / ICI_BW
+    bound = max(t_compute, t_memory, t_coll)
+    which = ("compute" if bound == t_compute else
+             "memory" if bound == t_memory else "collective")
+    model_flops_dev = cell.get("model_flops", 0.0) / CHIPS
+    t_model = model_flops_dev / PEAK_FLOPS
+    return {
+        "arch": arch, "shape": shape_name,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "bottleneck": which,
+        "model_flops_ratio": (model_flops_dev / use["flops"]
+                              if use["flops"] else 0.0),
+        "roofline_fraction": (t_model / bound) if bound else 0.0,
+        "corrected": corr is not None,
+        "mem_temp_bytes": (cell.get("memory") or {}).get("temp_bytes", 0),
+        "mem_args_bytes": (cell.get("memory") or {}).get(
+            "argument_bytes", 0),
+    }
+
+
+def build_table(path: str):
+    cells, probes = load(path)
+    rows = []
+    for (arch, shape_name), cell in sorted(cells.items()):
+        if not cell["ok"] or arch == "immsched-matcher":
+            continue
+        rows.append(roofline_row(arch, shape_name, cell,
+                                 probes.get((arch, shape_name))))
+    return rows
+
+
+def main(path: str = "dryrun.json"):
+    rows = build_table(path)
+    hdr = (f"{'arch':20s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s}"
+           f" {'coll_s':>10s} {'bound':>10s} {'useful/HLO':>10s}"
+           f" {'roofline%':>9s}")
+    print(hdr)
+    for r in rows:
+        print(f"{r['arch']:20s} {r['shape']:12s} "
+              f"{r['t_compute_s']:10.4f} {r['t_memory_s']:10.4f} "
+              f"{r['t_collective_s']:10.4f} {r['bottleneck']:>10s} "
+              f"{r['model_flops_ratio']:10.3f} "
+              f"{100 * r['roofline_fraction']:8.1f}%"
+              + ("" if r["corrected"] else "  (raw)"))
+    return rows
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "dryrun.json")

@@ -1,0 +1,43 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Paper-band comparisons are
+summarized at the end (see EXPERIMENTS.md for interpretation).
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only fig6,fig7,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma list: fig2a,fig2b,fig6,fig7,fig8,quant,"
+                         "matcher")
+    args = ap.parse_args()
+
+    from benchmarks import figures
+
+    benches = {
+        "fig2a": figures.fig2a_sched_overhead,
+        "fig2b": figures.fig2b_relaxation,
+        "fig6": figures.fig6_speedup,
+        "fig7": figures.fig7_lbt,
+        "fig8": figures.fig8_energy,
+        "quant": figures.quant_ablation,
+        "matcher": figures.matcher_scaling,
+    }
+    selected = (args.only.split(",") if args.only else list(benches))
+
+    print("name,us_per_call,derived")
+    for name in selected:
+        rows = benches[name.strip()]()
+        for rname, us, derived in rows:
+            print(f"{rname},{us:.1f},{derived}")
+        sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

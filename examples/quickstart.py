@@ -1,0 +1,39 @@
+"""Quickstart: IMMSched's parallel PSO-Ullmann subgraph matcher in 30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Plants an 8-tile workload DAG inside a 4x4 engine array and recovers a
+feasible mapping with the quantized (uint8, int32-accumulate) matcher —
+the computation the paper runs on the accelerator's MAC datapath.
+"""
+import jax
+import numpy as np
+
+from repro.core import graphs
+from repro.core.matcher import IMMSchedMatcher
+from repro.core.pso import PSOConfig
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    kq, kt = jax.random.split(key)
+    # a workload window: random 8-tile DAG
+    query = graphs.random_dag(kq, 8, edge_prob=0.35)
+    # an engine array that provably contains it
+    target = graphs.embed_query_in_target(kt, query, 16)
+
+    cfg = PSOConfig(num_particles=48, epochs=4, inner_steps=10,
+                    quantized=True)
+    result = IMMSchedMatcher(cfg).match(query, target)
+
+    assert result.found, "matcher failed on a feasible instance"
+    M = np.asarray(result.mapping, dtype=int)
+    print("feasible mappings found:", result.feasible_count)
+    print("tile -> engine:", {i: int(np.argmax(M[i])) for i in range(M.shape[0])})
+    covered = M @ target.adj.astype(int) @ M.T
+    print("all query edges preserved:", bool((covered >= query.adj).all()))
+    print("global best fitness f* =", result.f_star)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""End-to-end driver: train a ~100M-parameter qwen-family LM for a few
+hundred steps on CPU with checkpoint/restart.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+
+This wraps the production launcher (repro.launch.train) with a reduced
+config: same family/topology as qwen1.5-0.5b, ~100M params, synthetic
+deterministic data, AdamW, checkpointing every 50 steps. Kill it halfway
+and run again — it resumes from the latest checkpoint.
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm_ckpt")
+    args = ap.parse_args()
+    return train_main([
+        "--arch", "qwen1.5-0.5b", "--reduced",
+        "--d-model", "768", "--layers", "10",
+        "--steps", str(args.steps), "--batch", "8", "--seq", "256",
+        "--checkpoint-dir", args.ckpt, "--checkpoint-every", "50",
+    ])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,3 @@
+from repro.accel.platform import EDGE, CLOUD, Platform, get_platform
+from repro.accel.target_graph import free_engine_graph, target_graph
+from repro.accel.energy import CostModel

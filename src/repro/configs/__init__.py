@@ -1,0 +1,124 @@
+"""Architecture registry: ``--arch <id>`` resolution + per-arch policies.
+
+``get_config(arch)`` returns the exact published ModelConfig;
+``get_train_config(arch)`` returns the production training policy
+(optimizer family, state dtype, gradient-accumulation microbatches) sized
+for v5e 16 GB HBM (DESIGN.md §5); ``input_specs`` builds the input pytree
+(ShapeDtypeStructs for the dry-run, concrete arrays for smoke runs).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (ALL_SHAPES, DECODE_32K, LONG_500K,
+                                PREFILL_32K, TRAIN_4K, ModelConfig,
+                                ShapeConfig, TrainConfig, shapes_for)
+
+_MODULES = {
+    "llama3-8b": "llama3_8b",
+    "qwen1.5-110b": "qwen1_5_110b",
+    "qwen1.5-0.5b": "qwen1_5_0_5b",
+    "qwen2.5-3b": "qwen2_5_3b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "arctic-480b": "arctic_480b",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "zamba2-7b": "zamba2_7b",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+}
+
+ARCHS: List[str] = list(_MODULES)
+
+# production training policies per arch (memory budget: v5e 16 GB)
+_TRAIN_POLICY: Dict[str, TrainConfig] = {
+    "llama3-8b": TrainConfig(microbatches=4),
+    "qwen1.5-110b": TrainConfig(microbatches=16, optimizer="adafactor",
+                                opt_state_dtype="bfloat16"),
+    "qwen1.5-0.5b": TrainConfig(microbatches=1),
+    "qwen2.5-3b": TrainConfig(microbatches=2),
+    "seamless-m4t-medium": TrainConfig(microbatches=1),
+    "deepseek-v2-236b": TrainConfig(microbatches=16, optimizer="adafactor",
+                                    opt_state_dtype="bfloat16"),
+    "arctic-480b": TrainConfig(microbatches=16, optimizer="adafactor",
+                               opt_state_dtype="bfloat16"),
+    "xlstm-1.3b": TrainConfig(microbatches=2),
+    "zamba2-7b": TrainConfig(microbatches=4),
+    "qwen2-vl-7b": TrainConfig(microbatches=4),
+}
+
+# modality frontends (stubs per harness): token split for mixed inputs
+VLM_PATCH_TOKENS = 1024          # of the seq_len, for family == vlm
+AUDIO_FRAME_RATIO = 1.0          # encoder frames per decoder token
+
+# parallelism profile per (arch, shape): "2d" (FSDP×TP, default) or
+# "fsdp_only" (batch/params over ALL axes, no TP — wins for ≤10B-dense
+# training where TP's activation all-reduces dominate; §Perf)
+# NOTE: the fsdp_only experiment for ≤8B dense train cells was REFUTED by
+# measurement (probe collectives ×50, compile ×5 — XLA SPMD degrades at
+# 1-seq/device with 256-way param gathers; EXPERIMENTS.md §Perf iter 5).
+# The mechanism stays available for future meshes; no cell uses it.
+_PARALLELISM = {}
+
+
+def parallelism_profile(arch: str, shape_name: str) -> str:
+    return _PARALLELISM.get((arch, shape_name), "2d")
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.CONFIG
+
+
+def get_train_config(arch: str) -> TrainConfig:
+    return _TRAIN_POLICY[arch]
+
+
+def arch_shapes(arch: str):
+    return shapes_for(get_config(arch))
+
+
+def input_specs(arch: str, shape: ShapeConfig, abstract: bool = True,
+                batch_override: int = 0):
+    """Input pytree for (arch × shape). ``abstract=True`` →
+    ShapeDtypeStructs (dry-run: no allocation); else small concrete arrays.
+
+    train:   full-sequence tokens + labels (+ frontend embeddings)
+    prefill: full-sequence tokens (+ frontend embeddings)
+    decode:  one new token (KV cache of seq_len managed by serve_step)
+    """
+    cfg = get_config(arch)
+    B = batch_override or shape.global_batch
+    S = shape.seq_len
+
+    def make(shp, dtype):
+        if abstract:
+            return jax.ShapeDtypeStruct(shp, dtype)
+        if dtype in (jnp.int32,):
+            return jnp.zeros(shp, dtype)
+        return jnp.zeros(shp, dtype)
+
+    batch = {}
+    if shape.mode == "decode":
+        batch["tokens"] = make((B, 1), jnp.int32)
+        if cfg.mrope:
+            batch["positions3"] = make((3, B, 1), jnp.int32)
+    else:
+        s_text = S
+        if cfg.family == "vlm":
+            n_patch = min(VLM_PATCH_TOKENS, S // 4)
+            s_text = S - n_patch
+            batch["patches"] = make((B, n_patch, cfg.d_model), jnp.bfloat16)
+        if cfg.family in ("encdec", "audio"):
+            n_frames = max(int(S * AUDIO_FRAME_RATIO) // 2, 8)
+            batch["frames"] = make((B, n_frames, cfg.d_model), jnp.bfloat16)
+        batch["tokens"] = make((B, s_text), jnp.int32)
+        if cfg.mrope:
+            batch["positions3"] = make((3, B, S), jnp.int32)
+        if shape.mode == "train":
+            batch["labels"] = make((B, s_text), jnp.int32)
+    return batch

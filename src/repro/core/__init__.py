@@ -1,0 +1,4 @@
+from repro.core import graphs, ilp, interrupts, preemptible_dag, pso, ullmann
+from repro.core.matcher import IMMSchedMatcher, MatchResult, \
+    build_distributed_match
+from repro.core.pso import PSOConfig

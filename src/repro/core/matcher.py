@@ -1,0 +1,184 @@
+"""Distributed IMMSched matcher: particles sharded over the device mesh.
+
+This is the paper's "particles → engines" mapping lifted to pod scale:
+every device runs a local swarm (vmap), and the *global controller* of the
+paper becomes a collective schedule executed once per epoch:
+
+  * global best  S*, f*  — all_gather of per-device bests + argmax select
+  * consensus    S̄      — psum of per-device elite-weighted sums (a global
+                           softmax over the union of local elites, computed
+                           with a pmax-stabilized exponent)
+
+The collectives are O(n·m·D) bytes per epoch vs O(N·K·n·m²) FLOPs of local
+work, so the matcher scales ~linearly in devices — the multi-pod dry-run
+compiles exactly this program on the 2×16×16 mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import pso
+from repro.core.graphs import Graph, as_device_graphs
+from repro.kernels import ref
+
+
+@dataclasses.dataclass
+class MatchResult:
+    mapping: Optional[np.ndarray]        # best feasible (n, m) or None
+    feasible_count: int
+    f_star: float
+    f_star_trace: np.ndarray             # (T, K) global-best trajectory
+    all_mappings: np.ndarray             # (T*N, n, m) projected mappings
+    all_feasible: np.ndarray             # (T*N,)
+    all_fitness: np.ndarray              # (T*N,)
+
+    @property
+    def found(self) -> bool:
+        return self.mapping is not None
+
+
+def _fuse_global_best(S_star, f_star, axis_names):
+    """Select the global-best particle without gathering every device's S.
+
+    v1 all-gathered (D, n, m) — D×65 KB per device per epoch. v2 (§Perf):
+    pmax the scalar fitness, then a *masked psum* ships only the winner's
+    S (ties averaged — they have equal fitness), cutting the collective
+    bytes by ~D/2×.
+    """
+    f_gmax = jax.lax.pmax(f_star, axis_names)
+    is_best = (f_star >= f_gmax).astype(S_star.dtype)
+    count = jax.lax.psum(is_best, axis_names)
+    S_best = jax.lax.psum(S_star * is_best, axis_names) \
+        / jnp.maximum(count, 1.0)
+    return S_best, f_gmax
+
+
+def _fuse_consensus(S, f, cfg, axis_names):
+    """Global elite consensus across devices (paper's global controller)."""
+    f_gmax = jax.lax.pmax(jnp.max(f), axis_names)
+    k = max(1, int(round(cfg.elite_frac * S.shape[0])))
+    f_top, idx = jax.lax.top_k(f, k)
+    w = jnp.exp((f_top - f_gmax) / cfg.consensus_temp)
+    weighted = jnp.einsum("k,knm->nm", w, S[idx])
+    wsum = jnp.sum(w)
+    weighted = jax.lax.psum(weighted, axis_names)
+    wsum = jax.lax.psum(wsum, axis_names)
+    return weighted / jnp.maximum(wsum, 1e-20)
+
+
+def build_distributed_match(Q_shape: Tuple[int, int], mesh: Mesh,
+                            cfg: pso.PSOConfig,
+                            axis_names: Sequence[str] = ("data",)):
+    """Returns a jit'd ``match(keys, Q, G, mask)`` running the full
+    Algorithm 1 with the swarm sharded over ``axis_names`` of ``mesh``.
+
+    ``keys`` must be (num_shards,) PRNG keys (one per device slice). The
+    result pytree mirrors ``pso.match`` with a leading shard axis on the
+    per-particle outputs.
+    """
+    axis_names = tuple(axis_names)
+
+    def local_match(key, Q, G, mask):
+        n, m = mask.shape
+        maskf = mask.astype(jnp.float32)
+        mask_rows = maskf.sum(-1, keepdims=True)
+        S_bar0 = maskf / jnp.maximum(mask_rows, 1.0)
+        carry0 = (S_bar0, jnp.float32(-jnp.inf), S_bar0)
+        keys = jax.random.split(key[0], cfg.epochs)  # this shard's key
+
+        def epoch_step(carry, k):
+            carry, outs = pso.run_epoch(carry, k, Q, G, mask, cfg)
+            S_star, f_star, _ = carry
+            # ---- global controller: fuse across the mesh ----
+            S_star, f_star = _fuse_global_best(S_star, f_star, axis_names)
+            S_bar = _fuse_consensus(outs.pop("S_final"), outs["fitness"],
+                                    cfg, axis_names)
+            # global best-so-far trajectory (replicated)
+            outs["f_star_trace"] = jax.lax.pmax(outs["f_star_trace"],
+                                                axis_names)
+            return (S_star, f_star, S_bar), outs
+
+        (S_star, f_star, S_bar), outs = jax.lax.scan(epoch_step, carry0, keys)
+        outs["S_star"] = S_star
+        outs["f_star"] = f_star
+        return outs
+
+    shard_axes = P(axis_names)
+    in_specs = (shard_axes, P(), P(), P())
+    out_specs = dict(
+        mappings=P(None, axis_names), feasible=P(None, axis_names),
+        fitness=P(None, axis_names), f_star_trace=P(),
+        S_star=P(), f_star=P())
+
+    fn = jax.shard_map(local_match, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)
+    return jax.jit(fn)
+
+
+class IMMSchedMatcher:
+    """High-level matcher API.
+
+    Single-device by default; pass a mesh + axis names for the sharded
+    version (each mesh slice runs ``cfg.num_particles`` particles).
+    """
+
+    def __init__(self, cfg: Optional[pso.PSOConfig] = None,
+                 mesh: Optional[Mesh] = None,
+                 axis_names: Sequence[str] = ("data",)):
+        self.cfg = cfg or pso.PSOConfig()
+        self.mesh = mesh
+        self.axis_names = tuple(axis_names)
+
+    def match(self, query: Graph, target: Graph,
+              key: Optional[jax.Array] = None) -> MatchResult:
+        # relabel query vertices in topological order: the constructive
+        # (adjacency-guided) projection places vertices in index order and
+        # requires predecessors to be placed first
+        from repro.core.graphs import _topo_order
+        order = _topo_order(query.adj)
+        query = Graph(adj=query.adj[np.ix_(order, order)],
+                      types=query.types[order],
+                      weights=query.weights[order])
+        self._order = order
+        Q, G, mask = as_device_graphs(query, target)
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        if self.mesh is None:
+            outs = pso.match(key, Q, G, mask, self.cfg)
+        else:
+            num_shards = int(np.prod([self.mesh.shape[a]
+                                      for a in self.axis_names]))
+            keys = jax.random.split(key, num_shards)
+            fn = build_distributed_match(Q.shape, self.mesh, self.cfg,
+                                         self.axis_names)
+            outs = fn(keys, Q, G, mask)
+        return self._collect(outs)
+
+    def _collect(self, outs) -> MatchResult:
+        feas = np.asarray(outs["feasible"]).reshape(-1)
+        fit = np.asarray(outs["fitness"]).reshape(-1)
+        maps = np.asarray(outs["mappings"])
+        maps = maps.reshape(-1, maps.shape[-2], maps.shape[-1])
+        # undo the topological relabelling (rows back to caller order)
+        order = getattr(self, "_order", None)
+        if order is not None:
+            unperm = np.empty_like(maps)
+            unperm[:, order, :] = maps
+            maps = unperm
+        best = None
+        if feas.any():
+            idx = np.where(feas)[0]
+            best = maps[idx[np.argmax(fit[idx])]]
+        return MatchResult(
+            mapping=best,
+            feasible_count=int(feas.sum()),
+            f_star=float(np.asarray(outs["f_star"]).reshape(-1)[-1]),
+            f_star_trace=np.asarray(outs["f_star_trace"]),
+            all_mappings=maps, all_feasible=feas, all_fitness=fit)

@@ -1,0 +1,178 @@
+"""Public kernel API with backend dispatch and MXU-alignment padding.
+
+Backends:
+  "ref"       — jit'd pure-jnp oracle (ref.py). Default on CPU.
+  "pallas"    — compiled Pallas TPU kernels. Default on TPU.
+  "interpret" — Pallas kernels in interpret mode (CPU validation only).
+  "auto"      — "pallas" on TPU else "ref".
+
+All entry points accept *logical* (unpadded) shapes; padding to multiples of
+128 (MXU tile) happens here and is provably exact for every kernel (zero
+rows/cols contribute nothing — see per-kernel notes).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.argmax_project import (greedy_project_pallas,
+                                          masked_argmax_pallas)
+from repro.kernels.pso_fitness import (edge_fitness_pallas,
+                                       edge_fitness_quantized_pallas)
+from repro.kernels.pso_update import pso_update_pallas
+from repro.kernels.ullmann_refine import ullmann_refine_step_pallas
+
+MXU = 128
+
+
+def resolve_backend(backend: str) -> str:
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return backend
+
+
+def _pad_to(x: jax.Array, sizes: Tuple[int, ...]) -> jax.Array:
+    """Zero-pad trailing dims of x up to the given sizes."""
+    pads = [(0, 0)] * (x.ndim - len(sizes))
+    pads += [(0, s - d) for s, d in zip(sizes, x.shape[x.ndim - len(sizes):])]
+    if all(p == (0, 0) for p in pads):
+        return x
+    return jnp.pad(x, pads)
+
+
+def _round_up(v: int, mult: int = MXU) -> int:
+    return ((v + mult - 1) // mult) * mult
+
+
+# ---------------------------------------------------------------------------
+# Fitness
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def edge_fitness(S: jax.Array, Q: jax.Array, G: jax.Array,
+                 backend: str = "auto") -> jax.Array:
+    """Batched fitness -||Q - S G S^T||^2. S: (B, n, m) -> (B,) f32."""
+    backend = resolve_backend(backend)
+    if backend == "ref":
+        return jax.vmap(ref.edge_fitness, in_axes=(0, None, None))(S, Q, G)
+    n, m = S.shape[1], S.shape[2]
+    np_, mp = _round_up(n), _round_up(m)
+    Sp = _pad_to(S, (np_, mp))
+    Qp = _pad_to(Q, (np_, np_))
+    Gp = _pad_to(G, (mp, mp))
+    return edge_fitness_pallas(Sp, Qp, Gp, interpret=(backend == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "backend"))
+def edge_fitness_quantized(S_q: jax.Array, Q: jax.Array, G: jax.Array,
+                           scale: int = 255,
+                           backend: str = "auto") -> jax.Array:
+    """Fixed-point fitness (uint8 S, int32 accumulation). -> (B,) f32."""
+    backend = resolve_backend(backend)
+    if backend == "ref":
+        f = jax.vmap(ref.edge_fitness_quantized,
+                     in_axes=(0, None, None, None))(S_q, Q, G, scale)
+        return f.astype(jnp.float32)
+    n, m = S_q.shape[1], S_q.shape[2]
+    np_, mp = _round_up(n), _round_up(m)
+    Sp = _pad_to(S_q, (np_, mp))
+    Qp = _pad_to(Q, (np_, np_))
+    Gp = _pad_to(G, (mp, mp))
+    return edge_fitness_quantized_pallas(
+        Sp, Qp, Gp, scale=scale, interpret=(backend == "interpret"))
+
+
+# ---------------------------------------------------------------------------
+# Ullmann refinement
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def ullmann_refine_step(M: jax.Array, Q: jax.Array, G: jax.Array,
+                        backend: str = "auto") -> jax.Array:
+    """One refinement sweep, batched. M: (B, n, m) -> (B, n, m)."""
+    backend = resolve_backend(backend)
+    if backend == "ref":
+        return jax.vmap(ref.ullmann_refine_step,
+                        in_axes=(0, None, None))(M, Q, G)
+    B, n, m = M.shape
+    np_, mp = _round_up(n), _round_up(m)
+    Mp = _pad_to(M, (np_, mp))
+    Qp = _pad_to(Q, (np_, np_))
+    Gp = _pad_to(G, (mp, mp))
+    out = ullmann_refine_step_pallas(Mp, Qp, Gp,
+                                     interpret=(backend == "interpret"))
+    return out[:, :n, :m]
+
+
+# ---------------------------------------------------------------------------
+# Fused PSO update
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("omega", "c1", "c2", "c3", "v_max", "backend"))
+def pso_update(S, V, S_local, S_star, S_bar, mask, r,
+               omega: float, c1: float, c2: float, c3: float,
+               v_max: float = 1.0, backend: str = "auto"):
+    """Batched fused PSO step. S/V/S_local: (B, n, m); S_star/S_bar/mask:
+    (n, m); r: (B, 3) randoms. Returns (S_new, V_new)."""
+    backend = resolve_backend(backend)
+    if backend == "ref":
+        fn = functools.partial(ref.pso_update, omega=omega, c1=c1, c2=c2,
+                               c3=c3, v_max=v_max)
+        return jax.vmap(fn, in_axes=(0, 0, 0, None, None, None, 0))(
+            S, V, S_local, S_star, S_bar, mask, r)
+    B, n, m = S.shape
+    np_, mp = _round_up(n), _round_up(m)
+    Sp = _pad_to(S, (np_, mp))
+    Vp = _pad_to(V, (np_, mp))
+    Lp = _pad_to(S_local, (np_, mp))
+    starp = _pad_to(S_star, (np_, mp))
+    barp = _pad_to(S_bar, (np_, mp))
+    maskp = _pad_to(mask, (np_, mp))
+    r8 = _pad_to(r.astype(jnp.float32), (8,))
+    s_new, v_new = pso_update_pallas(
+        Sp, Vp, Lp, starp, barp, maskp, r8,
+        omega=omega, c1=c1, c2=c2, c3=c3, v_max=v_max,
+        interpret=(backend == "interpret"))
+    return s_new[:, :n, :m], v_new[:, :n, :m]
+
+
+# ---------------------------------------------------------------------------
+# Projection / argmax
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def greedy_project(S: jax.Array, mask: jax.Array,
+                   backend: str = "auto") -> jax.Array:
+    """Project one relaxed (n, m) S to a discrete injective M̂ (uint8)."""
+    backend = resolve_backend(backend)
+    if backend == "ref":
+        return ref.greedy_project(S, mask)
+    n, m = S.shape
+    np_, mp = _round_up(n), _round_up(m)
+    Sp = _pad_to(S, (np_, mp))
+    maskp = _pad_to(mask, (np_, mp))
+    out = greedy_project_pallas(Sp, maskp, interpret=(backend == "interpret"))
+    return out[:n, :m]
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def masked_argmax(X: jax.Array, mask: jax.Array, backend: str = "auto"):
+    """Masked argmax -> (value, flat index) over the *logical* shape."""
+    backend = resolve_backend(backend)
+    if backend == "ref":
+        return ref.masked_argmax(X, mask)
+    n, m = X.shape
+    np_, mp = _round_up(n), _round_up(m)
+    Xp = _pad_to(X, (np_, mp))
+    maskp = _pad_to(mask, (np_, mp))
+    val, idx = masked_argmax_pallas(Xp, maskp,
+                                    interpret=(backend == "interpret"))
+    # translate padded flat index back to logical coordinates
+    i, j = idx // mp, idx % mp
+    return val, (i * m + j).astype(jnp.int32)

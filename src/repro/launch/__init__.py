@@ -1,0 +1,2 @@
+# Launch entry points. NOTE: do not import dryrun here — it must own the
+# first jax initialization (XLA_FLAGS device-count override).

@@ -1,0 +1,442 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces, with ZERO device allocation (ShapeDtypeStruct
+inputs, abstract state via jax.eval_shape):
+
+  * proof the sharding is coherent (lower().compile() succeeds on the
+    16×16 single-pod and 2×16×16 multi-pod production meshes),
+  * ``compiled.memory_analysis()``   → bytes/device (fits-in-HBM proof),
+  * ``compiled.cost_analysis()``     → HLO FLOPs / bytes for §Roofline,
+  * collective bytes parsed from the partitioned HLO text
+    (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute operand sizes).
+
+Also dry-runs the paper's own technique: the distributed PSO-Ullmann
+matcher sharded over the full mesh (``--arch immsched-matcher``).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh both --out dryrun.json
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import (ARCHS, arch_shapes, get_config, get_train_config,
+                           input_specs, parallelism_profile)
+from repro.configs.base import ShapeConfig, shapes_for
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.runtime import sharding as shd
+from repro.runtime.serve_loop import make_decode_step, make_prefill_step
+from repro.runtime.train_loop import (make_train_state, make_train_step,
+                                      state_specs)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|"
+                       r"s16|u16|s8|u8|pred|c64|c128)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _group_size(line: str, default: int = 2) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device *wire bytes* of every collective in the partitioned HLO.
+
+    Operand shapes are not printed in post-optimization HLO, so we use the
+    RESULT shape R plus the replica-group size g with ring-algorithm wire
+    costs per participating device:
+        all-gather:          (g-1)/g · R          (R = gathered result)
+        reduce-scatter:      (g-1)   · R          (R = scattered result)
+        all-reduce:          2(g-1)/g · R         (RS + AG)
+        all-to-all:          (g-1)/g · R
+        collective-permute:  R
+    """
+    out = {k: 0.0 for k in _COLLECTIVES}
+    count = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (.+?) ([\w\-]+)\(", s)
+        if not m:
+            continue
+        op = m.group(2)
+        if op.endswith("-start"):
+            op = op[:-6]
+        if op not in _COLLECTIVES:
+            continue
+        result = m.group(1)
+        nbytes = sum(_shape_bytes(d, dims)
+                     for d, dims in _SHAPE_RE.findall(result))
+        g = _group_size(line)
+        if op == "all-gather":
+            wire = nbytes * (g - 1) / max(g, 1)
+        elif op == "reduce-scatter":
+            wire = nbytes * (g - 1)
+        elif op == "all-reduce":
+            wire = nbytes * 2 * (g - 1) / max(g, 1)
+        elif op == "all-to-all":
+            wire = nbytes * (g - 1) / max(g, 1)
+        else:                      # collective-permute
+            wire = nbytes
+        out[op] += wire
+        count[op] += 1
+    return {"bytes": {k: int(v) for k, v in out.items()}, "counts": count,
+            "total_bytes": int(sum(out.values()))}
+
+
+def model_flops(arch: str, shape: ShapeConfig) -> float:
+    """6·N_active·D (train) / 2·N_active·D (inference), D = tokens."""
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    total = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    active = total
+    if cfg.moe is not None:
+        m = cfg.moe
+        per_expert = 3 * cfg.d_model * m.expert_d_ff
+        routed_all = cfg.num_layers * m.num_experts * per_expert
+        routed_active = cfg.num_layers * m.top_k * per_expert
+        active = total - routed_all + routed_active
+    if shape.mode == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * active * tokens
+    if shape.mode == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * active * tokens
+    return 2.0 * active * shape.global_batch      # decode: 1 new token
+
+
+def probe_config(arch: str, k: int):
+    """Reduced-depth, fully-unrolled config: k pattern units.
+
+    Pattern unit = 1 layer (dense/moe/vlm; deepseek keeps its dense
+    block0), 1 enc + 1 dec layer (encdec), slstm_period layers (xlstm),
+    shared_attn_period layers (zamba2). k = period+1 ("tail" probe) gives
+    zamba2's trailing mamba-only layers.
+    """
+    cfg = get_config(arch)
+    if cfg.family in ("dense", "moe", "vlm"):
+        first = 1 if cfg.name.startswith("deepseek") else 0
+        return cfg.replace(num_layers=first + k, unroll=True)
+    if cfg.family in ("encdec", "audio"):
+        return cfg.replace(num_layers=k, encoder_layers=k, unroll=True)
+    if cfg.family == "ssm":
+        return cfg.replace(num_layers=k * cfg.ssm.slstm_period, unroll=True)
+    if cfg.family == "hybrid":
+        period = cfg.ssm.shared_attn_period
+        # k<=4: k groups; k==5 (sentinel): 2 groups + 1 tail mamba layer
+        n = k * period if k <= 4 else 2 * period + 1
+        return cfg.replace(num_layers=n, unroll=True)
+    raise ValueError(cfg.family)
+
+
+def pattern_counts(arch: str) -> dict:
+    """How many pattern units the full config has (for probe scaling)."""
+    cfg = get_config(arch)
+    if cfg.family in ("dense", "moe", "vlm"):
+        first = 1 if cfg.name.startswith("deepseek") else 0
+        return {"units": cfg.num_layers - first, "tail": 0}
+    if cfg.family in ("encdec", "audio"):
+        assert cfg.num_layers == cfg.encoder_layers
+        return {"units": cfg.num_layers, "tail": 0}
+    if cfg.family == "ssm":
+        return {"units": cfg.num_layers // cfg.ssm.slstm_period, "tail": 0}
+    if cfg.family == "hybrid":
+        period = cfg.ssm.shared_attn_period
+        return {"units": cfg.num_layers // period,
+                "tail": cfg.num_layers % period}
+    raise ValueError(cfg.family)
+
+
+def lower_cell(arch: str, shape: ShapeConfig, mesh, cfg=None, tcfg=None,
+               batch_override: int = 0, microbatch_override: int = 0):
+    """Build and lower the cell's step function. Returns `lowered`."""
+    cfg = cfg or get_config(arch)
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    B = batch_override or shape.global_batch
+    profile = parallelism_profile(arch, shape.name)
+
+    if shape.mode == "train":
+        tcfg = tcfg or get_train_config(arch)
+        if profile == "fsdp_only":
+            # batch shards over ALL axes → no microbatch split needed
+            microbatch_override = 1
+        if microbatch_override:
+            tcfg = __import__("dataclasses").replace(
+                tcfg, microbatches=microbatch_override)
+        state_abs = jax.eval_shape(
+            lambda k: make_train_state(model, tcfg, k), key)
+        sspecs = state_specs(state_abs, mesh, profile)
+        batch = input_specs(arch, shape, abstract=True, batch_override=B)
+        bspecs = shd.infer_batch_specs(batch, mesh, profile)
+        step = make_train_step(model, tcfg, mesh, profile)
+        jitted = jax.jit(step,
+                         in_shardings=(shd.named(sspecs, mesh),
+                                       shd.named(bspecs, mesh)),
+                         out_shardings=(shd.named(sspecs, mesh), None),
+                         donate_argnums=(0,))
+        return jitted.lower(state_abs, batch)
+
+    params_abs = jax.eval_shape(model.init, key)
+    pspecs = shd.infer_param_specs(params_abs, mesh)
+
+    if shape.mode == "prefill":
+        batch = input_specs(arch, shape, abstract=True, batch_override=B)
+        bspecs = shd.infer_batch_specs(batch, mesh)
+        caches_abs = jax.eval_shape(
+            lambda: model.init_caches(B, shape.seq_len))
+        cspecs = shd.infer_cache_specs(caches_abs, mesh)
+        step = make_prefill_step(model, mesh, max_len=shape.seq_len)
+        jitted = jax.jit(step,
+                         in_shardings=(shd.named(pspecs, mesh),
+                                       shd.named(bspecs, mesh)),
+                         out_shardings=(None, shd.named(cspecs, mesh)))
+        return jitted.lower(params_abs, batch)
+
+    # decode: one new token against a KV cache of seq_len
+    batch = input_specs(arch, shape, abstract=True, batch_override=B)
+    bspecs = shd.infer_batch_specs(batch, mesh)
+    caches_abs = jax.eval_shape(
+        lambda: model.init_caches(B, shape.seq_len))
+    cspecs = shd.infer_cache_specs(caches_abs, mesh)
+    step = make_decode_step(model, mesh)
+    index = jax.ShapeDtypeStruct((), jnp.int32)
+    jitted = jax.jit(step,
+                     in_shardings=(shd.named(pspecs, mesh),
+                                   shd.named(bspecs, mesh),
+                                   shd.named(cspecs, mesh), None),
+                     out_shardings=(None, None, shd.named(cspecs, mesh)),
+                     donate_argnums=(2,))
+    return jitted.lower(params_abs, batch, caches_abs, index)
+
+
+def lower_matcher(mesh):
+    """Dry-run the paper's technique itself on the production mesh."""
+    from repro.core.matcher import build_distributed_match
+    from repro.core.pso import PSOConfig
+    n, m = 128, 128
+    axis_names = tuple(mesh.axis_names)
+    num_shards = int(np.prod([mesh.shape[a] for a in axis_names]))
+    cfg = PSOConfig(num_particles=32, epochs=4, inner_steps=12,
+                    quantized=True, backend="ref")
+    fn = build_distributed_match((n, n), mesh, cfg, axis_names)
+    keys = jax.ShapeDtypeStruct((num_shards, 2), jnp.uint32)
+    Q = jax.ShapeDtypeStruct((n, n), jnp.uint8)
+    G = jax.ShapeDtypeStruct((m, m), jnp.uint8)
+    mask = jax.ShapeDtypeStruct((n, m), jnp.uint8)
+    return fn.lower(keys, Q, G, mask)
+
+
+def run_probe(arch: str, shape: ShapeConfig, mesh, mesh_name: str,
+              k: int) -> dict:
+    """Reduced-depth fully-unrolled probe compile: exact per-pattern-unit
+    FLOPs/bytes/collectives (XLA counts while bodies once — probes have no
+    layer while loops). benchmarks/roofline.py combines k=1,2(,3) probes
+    into corrected full-depth terms."""
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape.name, "mesh": mesh_name,
+           "probe": k, "ok": False}
+    try:
+        cfg = probe_config(arch, k)
+        tcfg = get_train_config(arch) if shape.mode == "train" else None
+        B = shape.global_batch
+        mb = 0
+        if shape.mode == "train" and tcfg.microbatches > 1 and \
+                parallelism_profile(arch, shape.name) != "fsdp_only":
+            B = shape.global_batch // tcfg.microbatches
+            mb = 1
+        lowered = lower_cell(arch, shape, mesh, cfg=cfg,
+                             batch_override=B, microbatch_override=mb)
+        compiled = lowered.compile()
+        ca = compiled.cost_analysis() or {}
+        rec["hlo_flops"] = float(ca.get("flops", 0.0))
+        rec["hlo_bytes"] = float(ca.get("bytes accessed", 0.0))
+        rec["collectives"] = collective_bytes(compiled.as_text())
+        rec["probe_batch"] = B
+        rec["microbatches_full"] = (
+            1 if (tcfg is None
+                  or parallelism_profile(arch, shape.name) == "fsdp_only")
+            else tcfg.microbatches)
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["wall_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def run_cell(arch: str, shape, mesh, mesh_name: str) -> dict:
+    t0 = time.time()
+    rec = {"arch": arch, "shape": getattr(shape, "name", shape),
+           "mesh": mesh_name, "ok": False}
+    try:
+        if arch == "immsched-matcher":
+            lowered = lower_matcher(mesh)
+            rec["model_flops"] = 0.0
+        else:
+            lowered = lower_cell(arch, shape, mesh)
+            rec["model_flops"] = model_flops(arch, shape)
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0, 1)
+        ca = compiled.cost_analysis() or {}
+        rec["hlo_flops"] = float(ca.get("flops", 0.0))
+        rec["hlo_bytes"] = float(ca.get("bytes accessed", 0.0))
+        try:
+            ma = compiled.memory_analysis()
+            rec["memory"] = {
+                "argument_bytes": getattr(ma, "argument_size_in_bytes", 0),
+                "output_bytes": getattr(ma, "output_size_in_bytes", 0),
+                "temp_bytes": getattr(ma, "temp_size_in_bytes", 0),
+                "generated_code_bytes": getattr(
+                    ma, "generated_code_size_in_bytes", 0),
+                "alias_bytes": getattr(ma, "alias_size_in_bytes", 0),
+            }
+        except Exception:
+            rec["memory"] = None
+        rec["collectives"] = collective_bytes(compiled.as_text())
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 — a failed cell is a bug report
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["wall_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id, 'all', or 'immsched-matcher'")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="")
+    ap.add_argument("--matcher", action="store_true",
+                    help="include the distributed-matcher cell")
+    ap.add_argument("--probes", action="store_true",
+                    help="also run reduced-depth unrolled probe compiles "
+                         "(single-pod mesh) for roofline correction")
+    args = ap.parse_args(argv)
+
+    assert len(jax.devices()) == 512, (
+        "dry-run needs the 512-device XLA override (run this module "
+        "directly, before any other jax init)")
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("pod-16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("2pods-2x16x16",
+                       make_production_mesh(multi_pod=True)))
+
+    archs = ARCHS if args.arch == "all" else [args.arch]
+    results = []
+    for mesh_name, mesh in meshes:
+        for arch in archs:
+            if arch == "immsched-matcher":
+                rec = run_cell(arch, "matcher_128x128", mesh, mesh_name)
+                results.append(rec)
+                _report(rec)
+                continue
+            shapes = arch_shapes(arch)
+            if args.shape != "all":
+                shapes = [s for s in shapes if s.name == args.shape]
+            for shape in shapes:
+                rec = run_cell(arch, shape, mesh, mesh_name)
+                results.append(rec)
+                _report(rec)
+                if args.probes and mesh_name == "pod-16x16":
+                    cfgm = get_config(arch)
+                    ks = [2, 3] + ([5] if cfgm.family == "hybrid" else [])
+                    for k in ks:
+                        prec = run_probe(arch, shape, mesh, mesh_name, k)
+                        results.append(prec)
+                        _report_probe(prec)
+        if args.arch == "all" or args.matcher:
+            rec = run_cell("immsched-matcher", "matcher_128x128", mesh,
+                           mesh_name)
+            results.append(rec)
+            _report(rec)
+
+    n_ok = sum(r["ok"] for r in results if "probe" not in r)
+    results_cells = [r for r in results if "probe" not in r]
+    results = results_cells + [r for r in results if "probe" in r]
+    results, n_total = results, len(results_cells)
+    probe_fail = sum(1 for r in results
+                     if "probe" in r and not r["ok"])
+    print(f"\nDRYRUN {n_ok}/{n_total} cells compiled OK"
+          + (f" ({probe_fail} probe failures)" if probe_fail else ""))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.out}")
+    return 0 if n_ok == n_total else 1
+
+
+def _report_probe(rec: dict) -> None:
+    if rec["ok"]:
+        print(f"  [probe k={rec['probe']}] {rec['arch']} {rec['shape']} "
+              f"flops={rec['hlo_flops']:.3e} bytes={rec['hlo_bytes']:.3e} "
+              f"coll={rec['collectives']['total_bytes']:.3e} "
+              f"({rec['wall_s']}s)")
+    else:
+        print(f"  [probe k={rec['probe']} FAIL] {rec['arch']} "
+              f"{rec['shape']} {rec.get('error', '')[:140]}")
+    sys.stdout.flush()
+
+
+def _report(rec: dict) -> None:
+    if rec["ok"]:
+        mem = rec.get("memory") or {}
+        col = rec["collectives"]["total_bytes"]
+        print(f"[OK ] {rec['mesh']:14s} {rec['arch']:20s} "
+              f"{str(rec['shape']):12s} "
+              f"flops={rec['hlo_flops']:.3e} bytes={rec['hlo_bytes']:.3e} "
+              f"coll={col:.3e} args={mem.get('argument_bytes', 0):.3e} "
+              f"temp={mem.get('temp_bytes', 0):.3e} "
+              f"({rec['wall_s']}s)")
+    else:
+        print(f"[FAIL] {rec['mesh']:14s} {rec['arch']:20s} "
+              f"{str(rec['shape']):12s} {rec.get('error', '')[:160]}")
+    sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,84 @@
+"""Serving driver: prefill + batched greedy decode with a KV cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b \
+        --reduced --batch 4 --prompt-len 64 --gen 32
+
+Demonstrates the serve path the decode_* dry-run cells lower: one prefill
+step, then token-at-a-time decode against donated cache buffers.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.train import reduced_config
+from repro.models import build_model
+from repro.runtime.serve_loop import make_decode_step, make_prefill_step
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_config(cfg, d_model=256, layers=4)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+
+    max_len = args.prompt_len + args.gen
+    prefill = jax.jit(make_prefill_step(model, max_len=max_len))
+    decode = jax.jit(make_decode_step(model), donate_argnums=(2,))
+
+    key = jax.random.PRNGKey(args.seed + 1)
+    tokens = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                cfg.vocab_size, dtype=jnp.int32)
+    batch = {"tokens": tokens}
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            key, (args.batch, 8, cfg.d_model), jnp.float32)
+    if cfg.family in ("encdec", "audio"):
+        batch["frames"] = jax.random.normal(
+            key, (args.batch, args.prompt_len, cfg.d_model), jnp.float32)
+
+    t0 = time.time()
+    logits, caches = prefill(params, batch)
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+    t_prefill = time.time() - t0
+
+    out_tokens = [tok]
+    pos = args.prompt_len + (8 if cfg.family == "vlm" else 0)
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        step_batch = {"tokens": tok[:, None]}
+        if cfg.mrope:
+            p = jnp.full((3, args.batch, 1), pos + i, jnp.int32)
+            step_batch["positions3"] = p
+        tok, logits, caches = decode(params, step_batch, caches,
+                                     jnp.int32(pos + i))
+        out_tokens.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+
+    gen = np.stack([np.asarray(t) for t in out_tokens], axis=1)
+    tps = args.batch * (args.gen - 1) / max(t_decode, 1e-9)
+    print(f"arch={cfg.name} batch={args.batch} "
+          f"prefill {t_prefill * 1e3:.0f} ms, "
+          f"decode {t_decode * 1e3:.0f} ms ({tps:.1f} tok/s)")
+    print("sample generation (token ids):", gen[0][:16].tolist())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

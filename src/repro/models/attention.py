@@ -1,0 +1,252 @@
+"""Attention: GQA/MHA with RoPE or M-RoPE, MLA (DeepSeek-V2), cross-attn.
+
+KV caches are explicit pytrees so ``serve_step`` can shard them:
+  GQA cache:  {"k": (B, S_max, Hkv, Dh), "v": (B, S_max, Hkv, Dh)}
+  MLA cache:  {"ckv": (B, S_max, kv_lora), "k_rope": (B, S_max, rope_dim)}
+MLA caches the *compressed latents* (the whole point of MLA: 512+64 floats
+per token instead of 2·H·Dh), expanding K/V on the fly at decode.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.models import common
+from repro.models.common import apply_mrope, apply_rope, dense_init
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg: ModelConfig) -> dict:
+    d, H, Hkv = cfg.d_model, cfg.num_heads, cfg.kv_heads
+    Dh = cfg.resolved_head_dim
+    dtype = common.dt(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, H, Dh), dtype),
+        "wk": dense_init(ks[1], (d, Hkv, Dh), dtype),
+        "wv": dense_init(ks[2], (d, Hkv, Dh), dtype),
+        "wo": dense_init(ks[3], (H, Dh, d), dtype, in_axis=(0, 1)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, Dh), dtype)
+        p["bk"] = jnp.zeros((Hkv, Dh), dtype)
+        p["bv"] = jnp.zeros((Hkv, Dh), dtype)
+    return p
+
+
+_Q_CHUNK = 2048          # prefill q-chunking threshold/size (memory bound)
+
+
+def _sdpa(q, k, v, mask, compute_dtype, unroll: bool = False):
+    """q: (B,Sq,H,Dh); k/v: (B,Skv,Hkv,Dh).
+
+    Sharding/memory design (see EXPERIMENTS.md §Perf):
+      * train/prefill (Sq > 1): K/V are repeated to the full head count so
+        the einsums are plain MHA with heads sharded on the tensor axis —
+        the 5-D grouped einsum made GSPMD pick a kv-head-sharded layout
+        (kv_heads < tensor size) and fall back to "involuntary full
+        rematerialization" replication;
+      * long prefill: q is chunked (scan over 2048-row blocks) so the
+        (B,H,Sq,Skv) logits never materialize — 32k×32k attention would
+        otherwise need ~17 GB/device of scratch;
+      * decode (Sq == 1): grouped einsum against an *S-sharded* KV cache
+        (flash-decode): the only collectives are tiny softmax-stat psums.
+    """
+    from repro.runtime.mesh_ctx import constrain
+    B, Sq, H, Dh = q.shape
+    Hkv = k.shape[2]
+    groups = H // Hkv
+    scale = Dh ** -0.5
+
+    if Sq == 1:
+        qg = q.reshape(B, Sq, Hkv, groups, Dh)
+        k = constrain(k, "batch", "tensor", None, None)
+        v = constrain(v, "batch", "tensor", None, None)
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(compute_dtype),
+                            k.astype(compute_dtype)) * scale
+        logits = logits.astype(jnp.float32)
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(compute_dtype)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs,
+                         v.astype(compute_dtype))
+        return out.reshape(B, Sq, H, Dh)
+
+    if groups > 1:
+        k = jnp.repeat(k, groups, axis=2)
+        v = jnp.repeat(v, groups, axis=2)
+    q = constrain(q.astype(compute_dtype), "batch", None, "tensor", None)
+    k = constrain(k.astype(compute_dtype), "batch", None, "tensor", None)
+    v = constrain(v.astype(compute_dtype), "batch", None, "tensor", None)
+
+    def att(q_blk, mask_blk):
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q_blk, k) * scale
+        logits = constrain(logits.astype(jnp.float32),
+                           "batch", "tensor", None, None)
+        logits = jnp.where(mask_blk[None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(compute_dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+    if Sq > _Q_CHUNK and Sq % _Q_CHUNK == 0:
+        nc = Sq // _Q_CHUNK
+        qc = jnp.moveaxis(q.reshape(B, nc, _Q_CHUNK, H, Dh), 1, 0)
+        mc = mask.reshape(nc, _Q_CHUNK, mask.shape[-1])
+
+        def body(_, inp):
+            q_blk, m_blk = inp
+            return None, att(q_blk, m_blk)
+
+        _, out = jax.lax.scan(body, None, (qc, mc),
+                              unroll=True if unroll else 1)
+        out = jnp.moveaxis(out, 0, 1).reshape(B, Sq, H, Dh)
+    else:
+        out = att(q, mask)
+    return out
+
+
+def gqa_attention(params: dict, cfg: ModelConfig, x: jax.Array,
+                  positions, cache: Optional[dict] = None,
+                  cache_index=None, kv_source: Optional[jax.Array] = None,
+                  causal: bool = True):
+    """Full attention. ``kv_source`` (cross-attention) overrides K/V input.
+    With a cache: append current K/V at ``cache_index`` and attend over the
+    full cache buffer. Returns (out, new_cache)."""
+    cd = common.dt(cfg.compute_dtype)
+    src = x if kv_source is None else kv_source
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", src, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", src, params["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(q.dtype)
+        k = k + params["bk"].astype(k.dtype)
+        v = v + params["bv"].astype(v.dtype)
+
+    if kv_source is None:  # self-attention: positional encoding on q & k
+        if cfg.mrope:
+            q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+            k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        k_buf = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), cache_index, axis=1)
+        v_buf = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), cache_index, axis=1)
+        new_cache = {"k": k_buf, "v": v_buf}
+        k, v = k_buf, v_buf
+        kv_len = k.shape[1]
+        if causal:
+            mask = common.causal_mask(x.shape[1], kv_len, cache_index)
+        else:
+            mask = jnp.ones((x.shape[1], kv_len), dtype=bool)
+    else:
+        kv_len = k.shape[1]
+        mask = (common.causal_mask(x.shape[1], kv_len, 0) if causal else
+                jnp.ones((x.shape[1], kv_len), dtype=bool))
+
+    out = _sdpa(q, k, v, mask, cd, unroll=cfg.unroll)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(out.dtype))
+    return out.astype(x.dtype), new_cache
+
+
+def init_gqa_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16) -> dict:
+    Dh = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.kv_heads, Dh), dtype),
+        "v": jnp.zeros((batch, max_len, cfg.kv_heads, Dh), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 Multi-head Latent Attention)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: ModelConfig) -> dict:
+    m: MLAConfig = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    dtype = common.dt(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    qd = m.nope_head_dim + m.rope_head_dim
+    return {
+        # q: low-rank: d -> q_lora -> H*(nope+rope)
+        "wq_a": dense_init(ks[0], (d, m.q_lora_rank), dtype),
+        "q_norm": common.init_rmsnorm(m.q_lora_rank, dtype),
+        "wq_b": dense_init(ks[1], (m.q_lora_rank, H, qd), dtype),
+        # kv: compress d -> kv_lora (+ decoupled rope key from d)
+        "wkv_a": dense_init(ks[2], (d, m.kv_lora_rank), dtype),
+        "kv_norm": common.init_rmsnorm(m.kv_lora_rank, dtype),
+        "wk_rope": dense_init(ks[3], (d, m.rope_head_dim), dtype),
+        # expand latents: kv_lora -> H*(nope_k + v)
+        "wk_b": dense_init(ks[4], (m.kv_lora_rank, H, m.nope_head_dim),
+                           dtype),
+        "wv_b": dense_init(ks[5], (m.kv_lora_rank, H, m.v_head_dim), dtype),
+        "wo": dense_init(ks[6], (H, m.v_head_dim, d), dtype, in_axis=(0, 1)),
+    }
+
+
+def mla_attention(params: dict, cfg: ModelConfig, x: jax.Array, positions,
+                  cache: Optional[dict] = None, cache_index=None):
+    m: MLAConfig = cfg.mla
+    cd = common.dt(cfg.compute_dtype)
+    B, S, d = x.shape
+    H = cfg.num_heads
+
+    q_lat = jnp.einsum("bsd,dr->bsr", x, params["wq_a"].astype(x.dtype))
+    q_lat = common.rmsnorm(params["q_norm"], q_lat, cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", q_lat, params["wq_b"].astype(x.dtype))
+    q_nope, q_rope = jnp.split(q, [m.nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"].astype(x.dtype))
+    ckv = common.rmsnorm(params["kv_norm"], ckv, cfg.norm_eps)
+    k_rope = jnp.einsum("bsd,dk->bsk", x, params["wk_rope"].astype(x.dtype))
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+
+    new_cache = None
+    if cache is not None:
+        ckv_buf = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), cache_index, axis=1)
+        kr_buf = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype),
+            cache_index, axis=1)
+        new_cache = {"ckv": ckv_buf, "k_rope": kr_buf}
+        ckv_all, k_rope_all = ckv_buf, kr_buf
+        mask = common.causal_mask(S, ckv_all.shape[1], cache_index)
+    else:
+        ckv_all, k_rope_all = ckv, k_rope
+        mask = common.causal_mask(S, S, 0)
+
+    # expand latents to per-head K_nope and V
+    k_nope = jnp.einsum("btr,rhk->bthk", ckv_all.astype(cd),
+                        params["wk_b"].astype(cd))
+    v = jnp.einsum("btr,rhk->bthk", ckv_all.astype(cd),
+                   params["wv_b"].astype(cd))
+
+    scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+    logits = (jnp.einsum("bshk,bthk->bhst", q_nope.astype(cd), k_nope)
+              + jnp.einsum("bshk,btk->bhst", q_rope.astype(cd),
+                           k_rope_all.astype(cd))) * scale
+    logits = jnp.where(mask[None, None], logits.astype(jnp.float32), -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(cd)
+    out = jnp.einsum("bhst,bthk->bshk", probs, v)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(cd))
+    return out.astype(x.dtype), new_cache
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16) -> dict:
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, m.rope_head_dim), dtype),
+    }

@@ -1,0 +1,121 @@
+"""Shared model primitives: norms, RoPE/M-RoPE, initializers, dtype policy.
+
+Parameters are plain nested dicts of jnp arrays (pytrees); every module is
+an ``init_*`` returning params and an ``apply``-style pure function. Layer
+stacks hold *stacked* params (leading layer axis) consumed by ``lax.scan``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+          "float16": jnp.float16}
+
+
+def dt(name: str):
+    return DTYPES[name]
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, in_axis: int = 0) -> jax.Array:
+    """Truncated-normal fan-in init (LeCun-ish, standard for LMs)."""
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else \
+        math.prod(shape[a] for a in in_axis)
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32)
+            * (1.0 / math.sqrt(d))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    orig = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(orig)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (RoPE + qwen2-vl M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 500000.0) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array,
+                sections: Tuple[int, int, int],
+                theta: float = 1000000.0) -> jax.Array:
+    """Qwen2-VL multimodal RoPE. positions3: (3, B, S) — temporal/h/w
+    position streams (equal for pure text). The head dim is partitioned
+    into ``sections`` (t, h, w) frequency bands, each rotated by its own
+    position stream."""
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, d)
+    freqs = rope_freqs(d, theta)                       # (half,)
+    # select the position stream per frequency band
+    sec_id = jnp.repeat(jnp.arange(3), jnp.array(sections),
+                        total_repeat_length=half)      # (half,)
+    # gather: angle[b, s, f] = positions3[sec_id[f], b, s] * freqs[f]
+    p = positions3.astype(jnp.float32)                 # (3, B, S)
+    pos_f = p[sec_id]                                  # (half, B, S)
+    angles = jnp.moveaxis(pos_f, 0, -1) * freqs        # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+def causal_mask(q_len: int, kv_len: int, q_offset) -> jax.Array:
+    """(q_len, kv_len) bool mask; q_offset = absolute position of query 0
+    (int or traced scalar)."""
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    kv_pos = jnp.arange(kv_len)[None, :]
+    return q_pos >= kv_pos
+
+
+def stack_init(init_fn, key, n: int):
+    """vmap an init over a leading layer axis (stacked params for scan)."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)

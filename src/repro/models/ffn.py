@@ -1,0 +1,28 @@
+"""Feed-forward blocks: SwiGLU MLP (+ the dense residual used by Arctic)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import dense_init
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(ks[0], (d_model, d_ff), dtype),
+        "up": dense_init(ks[1], (d_model, d_ff), dtype),
+        "down": dense_init(ks[2], (d_ff, d_model), dtype),
+    }
+
+
+def mlp(params: dict, x: jax.Array, compute_dtype) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x.astype(compute_dtype),
+                   params["gate"].astype(compute_dtype))
+    u = jnp.einsum("bsd,df->bsf", x.astype(compute_dtype),
+                   params["up"].astype(compute_dtype))
+    h = jax.nn.silu(h) * u
+    out = jnp.einsum("bsf,fd->bsd", h, params["down"].astype(compute_dtype))
+    return out.astype(x.dtype)

@@ -1,0 +1,575 @@
+"""Model assembly: per-family builders exposing a uniform API.
+
+    build_model(cfg) -> BuiltModel with
+        .init(key)                                  -> params
+        .train_logits(params, batch)                -> (B, S, V) logits
+        .prefill(params, batch, max_len)            -> (logits, caches)
+        .decode(params, batch, caches, index)       -> (logits, caches)
+        .init_caches(batch_size, max_len)           -> caches pytree
+
+Families: dense (llama3/qwen*), moe (+MLA for deepseek-v2, +dense residual
+for arctic), ssm (xlstm), hybrid (zamba2), encdec (seamless), vlm
+(qwen2-vl text backbone + stub patch embeddings).
+
+Layer stacks are ``lax.scan`` over stacked params (compile-time O(1) in
+depth); per-block remat policy via ``jax.checkpoint``. Caches carry a
+leading layer axis and ride the same scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, common, ffn, moe, ssm
+from repro.models.common import dense_init, embed_init
+
+CACHE_DTYPE = jnp.bfloat16
+
+
+@dataclasses.dataclass
+class BuiltModel:
+    cfg: ModelConfig
+    init: Callable
+    train_logits: Callable
+    prefill: Callable
+    decode: Callable
+    init_caches: Callable
+    num_params: Callable
+
+
+# ---------------------------------------------------------------------------
+# Transformer decoder block (dense / moe / mla variants)
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ModelConfig) -> dict:
+    dtype = common.dt(cfg.param_dtype)
+    k_attn, k_ffn = jax.random.split(key)
+    p = {"ln1": common.init_rmsnorm(cfg.d_model, dtype),
+         "ln2": common.init_rmsnorm(cfg.d_model, dtype)}
+    if cfg.mla is not None:
+        p["attn"] = attention.init_mla(k_attn, cfg)
+    else:
+        p["attn"] = attention.init_gqa(k_attn, cfg)
+    if cfg.moe is not None:
+        p["ffn"] = moe.init_moe(k_ffn, cfg)
+    else:
+        p["ffn"] = ffn.init_mlp(k_ffn, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _apply_block(p, cfg: ModelConfig, x, positions, cache, cache_index,
+                 dense_override: bool = False):
+    h = common.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.mla is not None:
+        a, new_cache = attention.mla_attention(p["attn"], cfg, h, positions,
+                                               cache, cache_index)
+    else:
+        a, new_cache = attention.gqa_attention(p["attn"], cfg, h, positions,
+                                               cache, cache_index)
+    x = x + a
+    h = common.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if cfg.moe is not None and not dense_override:
+        f = moe.moe_ffn(p["ffn"], cfg, h)
+    else:
+        f = ffn.mlp(p["ffn"], h, common.dt(cfg.compute_dtype))
+    return x + f, new_cache
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    policy = (jax.checkpoint_policies.nothing_saveable
+              if cfg.remat == "full" else
+              jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _scan_stack(block_fn, stacked_params, x, caches, unroll: bool = False):
+    """Scan a block over stacked layer params (+ optional stacked caches).
+    ``unroll=True`` (dry-run probes) emits straight-line code so XLA's cost
+    analysis sees every layer."""
+    kw = dict(unroll=True) if unroll else {}
+    if caches is None:
+        def body(carry, p_l):
+            y, _ = block_fn(p_l, carry, None)
+            return y, None
+        x, _ = jax.lax.scan(body, x, stacked_params, **kw)
+        return x, None
+
+    def body(carry, inp):
+        p_l, cache_l = inp
+        y, new_cache = block_fn(p_l, carry, cache_l)
+        return y, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (stacked_params, caches), **kw)
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Shared embedding / head
+# ---------------------------------------------------------------------------
+
+def _init_embed_head(key, cfg: ModelConfig) -> dict:
+    dtype = common.dt(cfg.param_dtype)
+    k1, k2 = jax.random.split(key)
+    p = {"embed": embed_init(k1, cfg.vocab_size, cfg.d_model, dtype),
+         "final_ln": common.init_rmsnorm(cfg.d_model, dtype)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(k2, (cfg.d_model, cfg.vocab_size), dtype)
+    return p
+
+
+def _embed(p, cfg, tokens):
+    cd = common.dt(cfg.compute_dtype)
+    return p["embed"].astype(cd)[tokens]
+
+
+def _head(p, cfg, x):
+    cd = common.dt(cfg.compute_dtype)
+    x = common.rmsnorm(p["final_ln"], x, cfg.norm_eps)
+    w = (p["embed"].T if cfg.tie_embeddings else p["lm_head"])
+    return jnp.einsum("bsd,dv->bsv", x.astype(cd), w.astype(cd))
+
+
+def _default_positions(batch):
+    tokens = batch["tokens"]
+    if "positions" in batch:
+        return batch["positions"]
+    B, S = tokens.shape
+    return jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+
+# ---------------------------------------------------------------------------
+# Dense / MoE / VLM decoder-only family
+# ---------------------------------------------------------------------------
+
+def _build_decoder_only(cfg: ModelConfig) -> BuiltModel:
+    first_dense = 1 if (cfg.moe is not None and cfg.name.startswith(
+        "deepseek")) else 0
+    n_scanned = cfg.num_layers - first_dense
+
+    def init(key):
+        k_eh, k_first, k_stack, k_fe = jax.random.split(key, 4)
+        p = _init_embed_head(k_eh, cfg)
+        if first_dense:
+            dense_cfg = cfg.replace(moe=None, d_ff=cfg.d_ff or
+                                    4 * cfg.d_model)
+            p["block0"] = _init_block(k_first, dense_cfg)
+        p["blocks"] = common.stack_init(
+            lambda k: _init_block(k, cfg), k_stack, n_scanned)
+        if cfg.frontend == "vision":
+            p["patch_proj"] = dense_init(k_fe, (cfg.d_model, cfg.d_model),
+                                         common.dt(cfg.param_dtype))
+        return p
+
+    def _assemble_x(p, batch):
+        x = _embed(p, cfg, batch["tokens"])
+        if cfg.frontend == "vision" and "patches" in batch:
+            cd = common.dt(cfg.compute_dtype)
+            pe = jnp.einsum("bsd,dk->bsk", batch["patches"].astype(cd),
+                            p["patch_proj"].astype(cd))
+            x = jnp.concatenate([pe, x], axis=1)
+        return x
+
+    def _run(p, batch, caches, cache_index):
+        x = _assemble_x(p, batch)
+        positions = batch.get("positions3") if cfg.mrope else None
+        if positions is None:
+            if cfg.mrope:
+                B, S = x.shape[:2]
+                pos = jnp.broadcast_to(
+                    jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+                positions = jnp.broadcast_to(pos[None], (3, B, S))
+            else:
+                B, S = x.shape[:2]
+                base = jnp.arange(S, dtype=jnp.int32)[None] + (
+                    cache_index if cache_index is not None else 0)
+                positions = jnp.broadcast_to(base, (B, S))
+
+        if first_dense:
+            cache0 = None if caches is None else \
+                jax.tree.map(lambda c: c[0], caches["block0"])
+            dense_cfg = cfg.replace(moe=None)
+            x, new_c0 = _apply_block(p["block0"], dense_cfg, x, positions,
+                                     cache0, cache_index)
+
+        def block_fn(p_l, x_l, cache_l):
+            return _apply_block(p_l, cfg, x_l, positions, cache_l,
+                                cache_index)
+
+        block_fn = _maybe_remat(block_fn, cfg)
+        stack_caches = None if caches is None else caches["blocks"]
+        x, new_stack = _scan_stack(block_fn, p["blocks"], x, stack_caches,
+                                   unroll=cfg.unroll)
+
+        new_caches = None
+        if caches is not None:
+            new_caches = {"blocks": new_stack}
+            if first_dense:
+                new_caches["block0"] = jax.tree.map(
+                    lambda c: c[None], new_c0)
+        return x, new_caches
+
+    def train_logits(p, batch):
+        x, _ = _run(p, batch, None, None)
+        return _head(p, cfg, x)
+
+    def init_caches(batch_size: int, max_len: int):
+        if cfg.mla is not None:
+            proto = attention.init_mla_cache(cfg, batch_size, max_len,
+                                             CACHE_DTYPE)
+        else:
+            proto = attention.init_gqa_cache(cfg, batch_size, max_len,
+                                             CACHE_DTYPE)
+        caches = {"blocks": jax.tree.map(
+            lambda c: jnp.zeros((n_scanned,) + c.shape, c.dtype), proto)}
+        if first_dense:
+            caches["block0"] = jax.tree.map(
+                lambda c: jnp.zeros((1,) + c.shape, c.dtype), proto)
+        return caches
+
+    def prefill(p, batch, max_len: int):
+        caches = init_caches(batch["tokens"].shape[0], max_len)
+        x, new_caches = _run(p, batch, caches, 0)
+        logits = _head(p, cfg, x[:, -1:])
+        return logits, new_caches
+
+    def decode(p, batch, caches, index):
+        x, new_caches = _run(p, batch, caches, index)
+        return _head(p, cfg, x), new_caches
+
+    def num_params(p):
+        return sum(x.size for x in jax.tree.leaves(p))
+
+    return BuiltModel(cfg=cfg, init=init, train_logits=train_logits,
+                      prefill=prefill, decode=decode,
+                      init_caches=init_caches, num_params=num_params)
+
+
+# ---------------------------------------------------------------------------
+# xLSTM family (mLSTM groups + periodic sLSTM)
+# ---------------------------------------------------------------------------
+
+def _build_xlstm(cfg: ModelConfig) -> BuiltModel:
+    period = cfg.ssm.slstm_period
+    assert cfg.num_layers % period == 0, "xlstm layers % period"
+    groups = cfg.num_layers // period
+    m_per_group = period - 1
+
+    def init(key):
+        k_eh, k_m, k_s = jax.random.split(key, 3)
+        p = _init_embed_head(k_eh, cfg)
+        p["mlstm"] = common.stack_init(
+            lambda k: common.stack_init(
+                lambda kk: {"ln": common.init_rmsnorm(
+                    cfg.d_model, common.dt(cfg.param_dtype)),
+                    "core": ssm.init_mlstm(kk, cfg)}, k, m_per_group),
+            k_m, groups)
+        p["slstm"] = common.stack_init(
+            lambda k: {"ln": common.init_rmsnorm(
+                cfg.d_model, common.dt(cfg.param_dtype)),
+                "core": ssm.init_slstm(k, cfg)}, k_s, groups)
+        return p
+
+    def _run(p, batch, caches):
+        x = _embed(p, cfg, batch["tokens"])
+
+        def mlstm_fn(p_l, x_l, cache_l):
+            h = common.rmsnorm(p_l["ln"], x_l, cfg.norm_eps)
+            out, new_cache = ssm.mlstm_block(p_l["core"], cfg, h, cache_l)
+            return x_l + out, new_cache
+
+        def slstm_fn(p_l, x_l, cache_l):
+            h = common.rmsnorm(p_l["ln"], x_l, cfg.norm_eps)
+            out, new_cache = ssm.slstm_block(p_l["core"], cfg, h, cache_l)
+            return x_l + out, new_cache
+
+        mlstm_fn = _maybe_remat(mlstm_fn, cfg)
+
+        def group_fn(p_g, x_g, cache_g):
+            mc = None if cache_g is None else cache_g["mlstm"]
+            x_g, new_mc = _scan_stack(mlstm_fn, p_g["m"], x_g, mc,
+                                      unroll=cfg.unroll)
+            sc = None if cache_g is None else cache_g["slstm"]
+            x_g, new_sc = slstm_fn(p_g["s"], x_g, sc)
+            new_cache = None if cache_g is None else \
+                {"mlstm": new_mc, "slstm": new_sc}
+            return x_g, new_cache
+
+        stacked = {"m": p["mlstm"], "s": p["slstm"]}
+        x, new_caches = _scan_stack(group_fn, stacked, x, caches,
+                                    unroll=cfg.unroll)
+        return x, new_caches
+
+    def train_logits(p, batch):
+        x, _ = _run(p, batch, None)
+        return _head(p, cfg, x)
+
+    def init_caches(batch_size: int, max_len: int):
+        mc = ssm.init_mlstm_cache(cfg, batch_size, CACHE_DTYPE)
+        sc = ssm.init_slstm_cache(cfg, batch_size)
+        return {
+            "mlstm": jax.tree.map(
+                lambda c: jnp.zeros((groups, m_per_group) + c.shape,
+                                    c.dtype), mc),
+            "slstm": jax.tree.map(
+                lambda c: jnp.zeros((groups,) + c.shape, c.dtype), sc),
+        }
+
+    def prefill(p, batch, max_len: int):
+        caches = init_caches(batch["tokens"].shape[0], max_len)
+        x, new_caches = _run(p, batch, caches)
+        return _head(p, cfg, x[:, -1:]), new_caches
+
+    def decode(p, batch, caches, index):
+        x, new_caches = _run(p, batch, caches)
+        return _head(p, cfg, x), new_caches
+
+    def num_params(p):
+        return sum(x.size for x in jax.tree.leaves(p))
+
+    return BuiltModel(cfg=cfg, init=init, train_logits=train_logits,
+                      prefill=prefill, decode=decode,
+                      init_caches=init_caches, num_params=num_params)
+
+
+# ---------------------------------------------------------------------------
+# Zamba2-style hybrid (mamba2 stacks + one *shared* attention block)
+# ---------------------------------------------------------------------------
+
+def _build_hybrid(cfg: ModelConfig) -> BuiltModel:
+    period = cfg.ssm.shared_attn_period
+    groups = cfg.num_layers // period
+    tail = cfg.num_layers - groups * period
+
+    def init(key):
+        ks = jax.random.split(key, 5)
+        p = _init_embed_head(ks[0], cfg)
+        dtype = common.dt(cfg.param_dtype)
+        p["mamba"] = common.stack_init(
+            lambda k: common.stack_init(
+                lambda kk: {"ln": common.init_rmsnorm(cfg.d_model, dtype),
+                            "core": ssm.init_mamba2(kk, cfg)}, k, period),
+            ks[1], groups)
+        if tail:
+            p["mamba_tail"] = common.stack_init(
+                lambda kk: {"ln": common.init_rmsnorm(cfg.d_model, dtype),
+                            "core": ssm.init_mamba2(kk, cfg)}, ks[2], tail)
+        # the shared transformer block (weights reused at every period)
+        p["shared_attn"] = _init_block(ks[3], cfg.replace(moe=None))
+        return p
+
+    def _run(p, batch, caches, cache_index):
+        x = _embed(p, cfg, batch["tokens"])
+        B, S = batch["tokens"].shape
+        base = jnp.arange(S, dtype=jnp.int32)[None] + (
+            cache_index if cache_index is not None else 0)
+        positions = jnp.broadcast_to(base, (B, S))
+
+        def mamba_fn(p_l, x_l, cache_l):
+            h = common.rmsnorm(p_l["ln"], x_l, cfg.norm_eps)
+            out, new_cache = ssm.mamba2_block(p_l["core"], cfg, h, cache_l)
+            return x_l + out, new_cache
+
+        mamba_fn = _maybe_remat(mamba_fn, cfg)
+
+        def group_fn(p_g, x_g, cache_g):
+            mcache = None if cache_g is None else cache_g["mamba"]
+            x_g, new_m = _scan_stack(mamba_fn, p_g, x_g, mcache,
+                                     unroll=cfg.unroll)
+            # shared attention block (same weights every group — closure)
+            acache = None if cache_g is None else cache_g["attn"]
+            x_g, new_a = _apply_block(p["shared_attn"], cfg, x_g, positions,
+                                      acache, cache_index)
+            new_cache = None if cache_g is None else \
+                {"mamba": new_m, "attn": new_a}
+            return x_g, new_cache
+
+        x, new_caches = _scan_stack(group_fn, p["mamba"], x, caches if
+                                    caches is None else caches["groups"],
+                                    unroll=cfg.unroll)
+        new_tail = None
+        if tail:
+            tcache = None if caches is None else caches["tail"]
+            x, new_tail = _scan_stack(mamba_fn, p["mamba_tail"], x, tcache,
+                                      unroll=cfg.unroll)
+        out_caches = None
+        if caches is not None:
+            out_caches = {"groups": new_caches}
+            if tail:
+                out_caches["tail"] = new_tail
+        return x, out_caches
+
+    def train_logits(p, batch):
+        x, _ = _run(p, batch, None, None)
+        return _head(p, cfg, x)
+
+    def init_caches(batch_size: int, max_len: int):
+        mc = ssm.init_mamba2_cache(cfg, batch_size, CACHE_DTYPE)
+        ac = attention.init_gqa_cache(cfg, batch_size, max_len, CACHE_DTYPE)
+        caches = {"groups": {
+            "mamba": jax.tree.map(
+                lambda c: jnp.zeros((groups, period) + c.shape, c.dtype),
+                mc),
+            "attn": jax.tree.map(
+                lambda c: jnp.zeros((groups,) + c.shape, c.dtype), ac),
+        }}
+        if tail:
+            caches["tail"] = jax.tree.map(
+                lambda c: jnp.zeros((tail,) + c.shape, c.dtype), mc)
+        return caches
+
+    def prefill(p, batch, max_len: int):
+        caches = init_caches(batch["tokens"].shape[0], max_len)
+        x, new_caches = _run(p, batch, caches, 0)
+        return _head(p, cfg, x[:, -1:]), new_caches
+
+    def decode(p, batch, caches, index):
+        x, new_caches = _run(p, batch, caches, index)
+        return _head(p, cfg, x), new_caches
+
+    def num_params(p):
+        return sum(x.size for x in jax.tree.leaves(p))
+
+    return BuiltModel(cfg=cfg, init=init, train_logits=train_logits,
+                      prefill=prefill, decode=decode,
+                      init_caches=init_caches, num_params=num_params)
+
+
+# ---------------------------------------------------------------------------
+# Encoder-decoder (seamless-m4t text decoder over stub audio encodings)
+# ---------------------------------------------------------------------------
+
+def _init_encdec_block(key, cfg: ModelConfig, cross: bool) -> dict:
+    dtype = common.dt(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    p = {"ln1": common.init_rmsnorm(cfg.d_model, dtype),
+         "attn": attention.init_gqa(ks[0], cfg),
+         "ln2": common.init_rmsnorm(cfg.d_model, dtype),
+         "ffn": ffn.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype)}
+    if cross:
+        p["ln_x"] = common.init_rmsnorm(cfg.d_model, dtype)
+        p["cross"] = attention.init_gqa(ks[2], cfg)
+    return p
+
+
+def _build_encdec(cfg: ModelConfig) -> BuiltModel:
+
+    def init(key):
+        ks = jax.random.split(key, 4)
+        p = _init_embed_head(ks[0], cfg)
+        dtype = common.dt(cfg.param_dtype)
+        p["frame_proj"] = dense_init(ks[3], (cfg.d_model, cfg.d_model),
+                                     dtype)
+        p["enc"] = common.stack_init(
+            lambda k: _init_encdec_block(k, cfg, cross=False), ks[1],
+            cfg.encoder_layers)
+        p["dec"] = common.stack_init(
+            lambda k: _init_encdec_block(k, cfg, cross=True), ks[2],
+            cfg.num_layers)
+        return p
+
+    def _encode(p, batch):
+        cd = common.dt(cfg.compute_dtype)
+        x = jnp.einsum("bsd,dk->bsk", batch["frames"].astype(cd),
+                       p["frame_proj"].astype(cd))
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+        def enc_fn(p_l, x_l, _):
+            h = common.rmsnorm(p_l["ln1"], x_l, cfg.norm_eps)
+            a, _ = attention.gqa_attention(p_l["attn"], cfg, h, positions,
+                                           causal=False)
+            x_l = x_l + a
+            h = common.rmsnorm(p_l["ln2"], x_l, cfg.norm_eps)
+            return x_l + ffn.mlp(p_l["ffn"], h, cd), None
+
+        enc_fn = _maybe_remat(enc_fn, cfg)
+        x, _ = _scan_stack(enc_fn, p["enc"], x, None, unroll=cfg.unroll)
+        return x
+
+    def _decode_stack(p, tokens, memory, caches, cache_index):
+        cd = common.dt(cfg.compute_dtype)
+        x = _embed(p, cfg, tokens)
+        B, S = tokens.shape
+        base = jnp.arange(S, dtype=jnp.int32)[None] + (
+            cache_index if cache_index is not None else 0)
+        positions = jnp.broadcast_to(base, (B, S))
+
+        def dec_fn(p_l, x_l, cache_l):
+            h = common.rmsnorm(p_l["ln1"], x_l, cfg.norm_eps)
+            a, new_self = attention.gqa_attention(
+                p_l["attn"], cfg, h, positions, cache_l, cache_index)
+            x_l = x_l + a
+            h = common.rmsnorm(p_l["ln_x"], x_l, cfg.norm_eps)
+            c, _ = attention.gqa_attention(p_l["cross"], cfg, h, positions,
+                                           kv_source=memory, causal=False)
+            x_l = x_l + c
+            h = common.rmsnorm(p_l["ln2"], x_l, cfg.norm_eps)
+            return x_l + ffn.mlp(p_l["ffn"], h, cd), new_self
+
+        dec_fn = _maybe_remat(dec_fn, cfg)
+        return _scan_stack(dec_fn, p["dec"], x, caches,
+                           unroll=cfg.unroll)
+
+    def train_logits(p, batch):
+        memory = _encode(p, batch)
+        x, _ = _decode_stack(p, batch["tokens"], memory, None, None)
+        return _head(p, cfg, x)
+
+    def init_caches(batch_size: int, max_len: int):
+        proto = attention.init_gqa_cache(cfg, batch_size, max_len,
+                                         CACHE_DTYPE)
+        self_caches = jax.tree.map(
+            lambda c: jnp.zeros((cfg.num_layers,) + c.shape, c.dtype),
+            proto)
+        # encoder memory cached at prefill (bf16)
+        mem = jnp.zeros((batch_size, max_len, cfg.d_model), CACHE_DTYPE)
+        return {"self": self_caches, "memory": mem}
+
+    def prefill(p, batch, max_len: int):
+        memory = _encode(p, batch)
+        caches = init_caches(batch["tokens"].shape[0], max_len)
+        # store encoder memory (pad/crop to max_len frames)
+        S_enc = memory.shape[1]
+        mem_buf = jax.lax.dynamic_update_slice_in_dim(
+            caches["memory"], memory.astype(CACHE_DTYPE)[:, :max_len], 0,
+            axis=1)
+        x, new_self = _decode_stack(p, batch["tokens"], memory,
+                                    caches["self"], 0)
+        return (_head(p, cfg, x[:, -1:]),
+                {"self": new_self, "memory": mem_buf})
+
+    def decode(p, batch, caches, index):
+        memory = caches["memory"].astype(common.dt(cfg.compute_dtype))
+        x, new_self = _decode_stack(p, batch["tokens"], memory,
+                                    caches["self"], index)
+        return _head(p, cfg, x), {"self": new_self,
+                                  "memory": caches["memory"]}
+
+    def num_params(p):
+        return sum(x.size for x in jax.tree.leaves(p))
+
+    return BuiltModel(cfg=cfg, init=init, train_logits=train_logits,
+                      prefill=prefill, decode=decode,
+                      init_caches=init_caches, num_params=num_params)
+
+
+# ---------------------------------------------------------------------------
+
+def build_model(cfg: ModelConfig) -> BuiltModel:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return _build_decoder_only(cfg)
+    if cfg.family == "ssm":
+        return _build_xlstm(cfg)
+    if cfg.family == "hybrid":
+        return _build_hybrid(cfg)
+    if cfg.family in ("encdec", "audio"):
+        return _build_encdec(cfg)
+    raise ValueError(f"unknown family {cfg.family}")

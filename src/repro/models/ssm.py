@@ -1,0 +1,340 @@
+"""State-space / recurrent blocks: Mamba2 (SSD) and xLSTM (mLSTM + sLSTM).
+
+Both Mamba2's SSD and xLSTM's mLSTM are *gated linear attention* with a
+scalar-per-head forget gate, so they share one chunkwise-parallel core:
+
+    state_t = a_t · state_{t-1} + k_t v_tᵀ          (a_t = exp(log_f_t))
+    out_t   = q_tᵀ · state_t
+
+``chunked_gla`` evaluates this with O(S·L) work (L = chunk length):
+intra-chunk masked attention + inter-chunk state carry via ``lax.scan`` —
+the production formulation (FlashLinearAttention-style), sub-quadratic in
+sequence length, which is what qualifies these archs for ``long_500k``.
+``gla_step`` is the O(1)-per-token recurrent form used by decode.
+
+mLSTM folds its input gate into k and tracks the xLSTM normalizer as an
+extra value column; Mamba2 adds the D skip path and dt-scaled input.
+sLSTM (scalar memory) is inherently sequential → ``lax.scan`` over time.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models import common
+from repro.models.common import dense_init
+
+
+# ---------------------------------------------------------------------------
+# Chunkwise gated-linear-attention core
+# ---------------------------------------------------------------------------
+
+def chunked_gla(q, k, v, log_f, chunk: int, state0=None):
+    """q,k: (B,S,H,Dk); v: (B,S,H,Dv); log_f: (B,S,H) (≤ 0).
+    Returns (out (B,S,H,Dv), final_state (B,H,Dk,Dv))."""
+    B, S, H, Dk = q.shape
+    Dv = v.shape[-1]
+    L = min(chunk, S)
+    assert S % L == 0, (S, L)
+    N = S // L
+    cd = q.dtype
+
+    qc = q.reshape(B, N, L, H, Dk)
+    kc = k.reshape(B, N, L, H, Dk)
+    vc = v.reshape(B, N, L, H, Dv)
+    fc = log_f.reshape(B, N, L, H).astype(jnp.float32)
+    cum = jnp.cumsum(fc, axis=2)                       # (B,N,L,H)
+    total = cum[:, :, -1]                              # (B,N,H)
+
+    # intra-chunk masked attention with decay exp(cum_t - cum_s), s <= t
+    # logits[b,n,h,t,s] = (q_t·k_s) * exp(cum_t - cum_s)
+    att = jnp.einsum("bnthk,bnshk->bnhts", qc, kc)
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,N,t,s,H)
+    decay = jnp.moveaxis(decay, -1, 2)                      # (B,N,H,t,s)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    att = att * jnp.where(mask, jnp.exp(decay), 0.0).astype(cd)
+    out_intra = jnp.einsum("bnhts,bnshv->bnthv", att, vc)
+
+    # inter-chunk: carry state across chunks with a scan
+    # q side decay: exp(cum_t); k side: exp(total - cum_s)
+    q_dec = qc * jnp.exp(cum)[..., None].astype(cd)
+    k_dec = kc * jnp.exp(total[:, :, None] - cum)[..., None].astype(cd)
+    chunk_kv = jnp.einsum("bnshk,bnshv->bnhkv", k_dec, vc)  # (B,N,H,Dk,Dv)
+
+    state_dtype = cd if state0 is None else state0.dtype
+    if state0 is None:
+        state0 = jnp.zeros((B, H, Dk, Dv), cd)
+    state0 = state0.astype(cd)
+
+    def scan_fn(state, inp):
+        q_d, kv, tot = inp                              # per-chunk slices
+        out_inter = jnp.einsum("bthk,bhkv->bthv", q_d, state)
+        new_state = state * jnp.exp(tot)[:, :, None, None].astype(cd) + kv
+        return new_state, out_inter
+
+    xs = (jnp.moveaxis(q_dec, 1, 0), jnp.moveaxis(chunk_kv, 1, 0),
+          jnp.moveaxis(total, 1, 0))
+    final_state, out_inter = jax.lax.scan(scan_fn, state0, xs)
+    out_inter = jnp.moveaxis(out_inter, 0, 1).reshape(B, N, L, H, Dv)
+    out = (out_intra + out_inter).reshape(B, S, H, Dv)
+    return out, final_state.astype(state_dtype)
+
+
+def gla_step(state, q, k, v, log_f):
+    """O(1) decode step. q,k: (B,H,Dk); v: (B,H,Dv); log_f: (B,H).
+    Returns (out (B,H,Dv), new_state)."""
+    a = jnp.exp(log_f.astype(jnp.float32))[..., None, None].astype(q.dtype)
+    new_state = state.astype(q.dtype) * a + jnp.einsum("bhk,bhv->bhkv", k, v)
+    out = jnp.einsum("bhk,bhkv->bhv", q, new_state)
+    return out, new_state.astype(state.dtype)
+
+
+def _causal_conv(x, w, b, cache=None):
+    """Depthwise causal conv1d, kernel K. x: (B,S,C); w: (K,C); b: (C,).
+    With a cache ((B,K-1,C) trailing context) returns updated cache."""
+    K = w.shape[0]
+    if cache is not None:
+        xx = jnp.concatenate([cache.astype(x.dtype), x], axis=1)
+        new_cache = xx[:, -(K - 1):] if K > 1 else cache
+    else:
+        xx = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+        new_cache = None
+    out = sum(xx[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    return jax.nn.silu(out + b), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def init_mamba2(key, cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d                    # inner width
+    H = cfg.num_heads                      # SSD heads
+    P = d_in // H                          # head dim
+    N = s.state_dim
+    dtype = common.dt(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    conv_ch = d_in + 2 * N                 # x + B + C get the conv
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_in + 2 * N + H), dtype),
+        "conv_w": dense_init(ks[1], (s.conv_dim, conv_ch), dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32) + math.log(0.5),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": common.init_rmsnorm(d_in, dtype),
+        "out_proj": dense_init(ks[2], (d_in, d), dtype),
+    }
+
+
+def mamba2_block(params, cfg: ModelConfig, x, cache: Optional[dict] = None):
+    """x: (B,S,d). cache: {"conv": (B,K-1,C), "state": (B,H,N,P)}."""
+    s = cfg.ssm
+    cd = common.dt(cfg.compute_dtype)
+    B, S, d = x.shape
+    d_in = s.expand * d
+    H = cfg.num_heads
+    P = d_in // H
+    N = s.state_dim
+
+    z_xbc_dt = jnp.einsum("bsd,dk->bsk", x.astype(cd),
+                          params["in_proj"].astype(cd))
+    z, xbc, dt = jnp.split(z_xbc_dt, [d_in, 2 * d_in + 2 * N], axis=-1)
+    conv_cache = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"].astype(cd),
+                                 params["conv_b"].astype(cd), conv_cache)
+    xs, Bmat, Cmat = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"])          # (B,S,H)
+    A = -jnp.exp(params["A_log"])                      # (H,) negative
+    log_f = dt * A[None, None, :]                      # (B,S,H) ≤ 0
+
+    v = xs.reshape(B, S, H, P) * dt[..., None].astype(cd)
+    k = jnp.broadcast_to(Bmat[:, :, None, :], (B, S, H, N)).astype(cd)
+    q = jnp.broadcast_to(Cmat[:, :, None, :], (B, S, H, N)).astype(cd)
+
+    state0 = cache["state"] if cache is not None else None
+    if S == 1 and cache is not None:
+        out, new_state = gla_step(state0, q[:, 0], k[:, 0], v[:, 0],
+                                  log_f[:, 0])
+        out = out[:, None]
+    else:
+        out, new_state = chunked_gla(q, k, v, log_f, s.chunk, state0)
+    out = out + v * params["D"][None, None, :, None].astype(cd)
+    out = out.reshape(B, S, d_in)
+    out = common.rmsnorm(params["norm"], out, cfg.norm_eps)
+    out = out * jax.nn.silu(z)
+    out = jnp.einsum("bsk,kd->bsd", out, params["out_proj"].astype(cd))
+    new_cache = (None if cache is None else
+                 {"conv": new_conv, "state": new_state})
+    return out.astype(x.dtype), new_cache
+
+
+def init_mamba2_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = cfg.num_heads
+    P = d_in // H
+    return {
+        "conv": jnp.zeros((batch, s.conv_dim - 1, d_in + 2 * s.state_dim),
+                          dtype),
+        "state": jnp.zeros((batch, H, s.state_dim, P), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM block (matrix memory) and sLSTM block (scalar memory)
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    H = cfg.num_heads
+    dtype = common.dt(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "up_proj": dense_init(ks[0], (d, 2 * d_in), dtype),
+        "conv_w": dense_init(ks[1], (s.conv_dim, d_in), dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "wqkv": dense_init(ks[2], (d_in, 3, H, d_in // H), dtype),
+        "wif": dense_init(ks[3], (d_in, 2 * H), dtype),
+        "if_bias": jnp.concatenate([jnp.zeros((H,), jnp.float32),
+                                    3.0 + jnp.arange(H, dtype=jnp.float32)
+                                    / max(H - 1, 1) * 3.0]),  # f-bias 3..6
+        "norm": common.init_rmsnorm(d_in, dtype),
+        "down_proj": dense_init(ks[4], (d_in, d), dtype),
+    }
+
+
+def mlstm_block(params, cfg: ModelConfig, x, cache: Optional[dict] = None):
+    """xLSTM mLSTM block. cache: {"conv", "state" (B,H,Dk,Dv+1)}."""
+    s = cfg.ssm
+    cd = common.dt(cfg.compute_dtype)
+    B, S, d = x.shape
+    d_in = s.expand * d
+    H = cfg.num_heads
+    Dh = d_in // H
+
+    up = jnp.einsum("bsd,dk->bsk", x.astype(cd),
+                    params["up_proj"].astype(cd))
+    h_in, gate = jnp.split(up, 2, axis=-1)
+    conv_cache = cache["conv"] if cache is not None else None
+    h_conv, new_conv = _causal_conv(h_in, params["conv_w"].astype(cd),
+                                    params["conv_b"].astype(cd), conv_cache)
+    qkv = jnp.einsum("bsk,kthd->bsthd", h_conv, params["wqkv"].astype(cd))
+    q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+    k = k / math.sqrt(Dh)
+
+    if_gates = jnp.einsum("bsk,kh->bsh", h_conv,
+                          params["wif"].astype(cd)).astype(jnp.float32) \
+        + params["if_bias"]
+    i_gate, f_gate = jnp.split(if_gates, 2, axis=-1)      # (B,S,H)
+    log_f = -jax.nn.softplus(-f_gate)                     # log sigmoid(f)
+    # fold exp-input-gate into k; normalizer = extra ones column in v
+    k_eff = k * jnp.exp(jnp.minimum(i_gate, 8.0))[..., None].astype(cd)
+    v_aug = jnp.concatenate([v, jnp.ones_like(v[..., :1])], axis=-1)
+
+    state0 = cache["state"] if cache is not None else None
+    if S == 1 and cache is not None:
+        out_aug, new_state = gla_step(state0, q[:, 0], k_eff[:, 0],
+                                      v_aug[:, 0], log_f[:, 0])
+        out_aug = out_aug[:, None]
+    else:
+        out_aug, new_state = chunked_gla(q, k_eff, v_aug, log_f, s.chunk,
+                                         state0)
+    out, n = out_aug[..., :Dh], out_aug[..., Dh:]
+    out = out / jnp.maximum(jnp.abs(n), 1.0).astype(cd)
+    out = out.reshape(B, S, d_in)
+    out = common.rmsnorm(params["norm"], out, cfg.norm_eps)
+    out = out * jax.nn.silu(gate)
+    out = jnp.einsum("bsk,kd->bsd", out, params["down_proj"].astype(cd))
+    new_cache = (None if cache is None else
+                 {"conv": new_conv, "state": new_state})
+    return out.astype(x.dtype), new_cache
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = cfg.num_heads
+    Dh = d_in // H
+    return {
+        "conv": jnp.zeros((batch, s.conv_dim - 1, d_in), dtype),
+        "state": jnp.zeros((batch, H, Dh, Dh + 1), dtype),
+    }
+
+
+def init_slstm(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    H = cfg.num_heads
+    Dh = d // H
+    dtype = common.dt(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    return {
+        # recurrent weights are per-head block-diagonal (xLSTM design)
+        "w_in": dense_init(ks[0], (d, 4, H, Dh), dtype),
+        "r": dense_init(ks[1], (H, Dh, 4, Dh), dtype, in_axis=1),
+        "bias": jnp.zeros((4, H, Dh), jnp.float32),
+        "norm": common.init_rmsnorm(d, dtype),
+        "out_proj": dense_init(ks[2], (d, d), dtype),
+    }
+
+
+def slstm_block(params, cfg: ModelConfig, x, cache: Optional[dict] = None):
+    """Sequential sLSTM (lax.scan over time). cache: {"c","n","h","m"} each
+    (B,H,Dh)."""
+    cd = common.dt(cfg.compute_dtype)
+    B, S, d = x.shape
+    H = cfg.num_heads
+    Dh = d // H
+    zx = jnp.einsum("bsd,dghk->bsghk", x.astype(cd),
+                    params["w_in"].astype(cd))          # (B,S,4,H,Dh)
+
+    if cache is None:
+        zeros = jnp.zeros((B, H, Dh), jnp.float32)
+        state0 = {"c": zeros, "n": zeros, "h": zeros,
+                  "m": jnp.zeros((B, H, Dh), jnp.float32)}
+    else:
+        state0 = cache
+
+    r = params["r"].astype(cd)
+    bias = params["bias"]
+
+    def step(st, zx_t):
+        rec = jnp.einsum("bhk,hkgl->bghl", st["h"].astype(cd), r)
+        pre = (zx_t + rec).astype(jnp.float32) + bias
+        z_t = jnp.tanh(pre[:, 0])
+        i_t = pre[:, 1]
+        f_t = pre[:, 2]
+        o_t = jax.nn.sigmoid(pre[:, 3])
+        # stabilized exponential gating (xLSTM eq. 15-17)
+        log_f = -jax.nn.softplus(-f_t)
+        m_new = jnp.maximum(log_f + st["m"], i_t)
+        i_e = jnp.exp(i_t - m_new)
+        f_e = jnp.exp(log_f + st["m"] - m_new)
+        c_new = f_e * st["c"] + i_e * z_t
+        n_new = f_e * st["n"] + i_e
+        h_new = o_t * c_new / jnp.maximum(n_new, 1.0)
+        return ({"c": c_new, "n": n_new, "h": h_new, "m": m_new},
+                h_new.astype(cd))
+
+    state, hs = jax.lax.scan(step, state0, jnp.moveaxis(zx, 1, 0))
+    out = jnp.moveaxis(hs, 0, 1).reshape(B, S, d)
+    out = common.rmsnorm(params["norm"], out, cfg.norm_eps)
+    out = jnp.einsum("bsd,dk->bsk", out, params["out_proj"].astype(cd))
+    return out.astype(x.dtype), (state if cache is not None else None)
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int):
+    H = cfg.num_heads
+    Dh = cfg.d_model // H
+    z = jnp.zeros((batch, H, Dh), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z}

@@ -1,0 +1,15 @@
+from repro.optim.adamw import adamw
+from repro.optim.adafactor import adafactor
+from repro.optim.schedule import warmup_cosine
+from repro.optim.grad_compress import compressed_psum, CompressionState
+
+
+def get_optimizer(train_cfg):
+    if train_cfg.optimizer == "adamw":
+        return adamw(b1=train_cfg.b1, b2=train_cfg.b2,
+                     weight_decay=train_cfg.weight_decay,
+                     state_dtype=train_cfg.opt_state_dtype)
+    if train_cfg.optimizer == "adafactor":
+        return adafactor(weight_decay=train_cfg.weight_decay,
+                         state_dtype=train_cfg.opt_state_dtype)
+    raise ValueError(train_cfg.optimizer)

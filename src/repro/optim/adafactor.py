@@ -1,0 +1,68 @@
+"""Adafactor: factored second moments for ≥2-D params (O(n+m) state
+instead of O(n·m)). The giant-arch optimizer (qwen1.5-110b, deepseek-v2,
+arctic): optimizer HBM shrinks from 2×params to ~per-row/col vectors.
+No first moment (classic Adafactor-without-momentum)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import DTYPES
+from repro.optim.adamw import Optimizer
+
+
+def adafactor(decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0, weight_decay: float = 0.0,
+              state_dtype: str = "float32") -> Optimizer:
+    sdt = DTYPES[state_dtype]
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def one(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], sdt),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], sdt)}
+            return {"v": jnp.zeros(p.shape, sdt)}
+        return {"f": jax.tree.map(one, params,
+                                  is_leaf=lambda x: hasattr(x, "shape")),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        beta = 1.0 - count.astype(jnp.float32) ** -decay
+
+        def upd(g, st, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p):
+                vr = beta * st["vr"].astype(jnp.float32) + \
+                    (1 - beta) * g2.mean(axis=-1)
+                vc = beta * st["vc"].astype(jnp.float32) + \
+                    (1 - beta) * g2.mean(axis=-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(-1)[..., None, None], eps))
+                step = g * jax.lax.rsqrt(denom + eps)
+                new_st = {"vr": vr.astype(sdt), "vc": vc.astype(sdt)}
+            else:
+                v = beta * st["v"].astype(jnp.float32) + (1 - beta) * g2
+                step = g * jax.lax.rsqrt(v + eps)
+                new_st = {"v": v.astype(sdt)}
+            # relative step clipping (RMS-based)
+            rms = jnp.sqrt(jnp.mean(step * step) + eps)
+            step = step / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay and p.ndim >= 2:
+                step = step + weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * step
+            return new_p.astype(p.dtype), new_st
+
+        leaves_is = lambda x: hasattr(x, "shape")
+        out = jax.tree.map(upd, grads, state["f"], params, is_leaf=None)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_f = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"f": new_f, "count": count}
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,60 @@
+"""AdamW over arbitrary pytrees, with configurable moment dtype.
+
+``state_dtype="bfloat16"`` halves optimizer HBM (the production memory
+policy for the giant archs — see DESIGN.md §5); moments are upcast to f32
+inside the update, so the math is unchanged up to storage rounding.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import DTYPES
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable      # (grads, state, params, lr) -> (new_params, state)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1,
+          state_dtype: str = "float32") -> Optimizer:
+    sdt = DTYPES[state_dtype]
+
+    def init(params):
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, sdt), params)
+        return {"m": zeros,
+                "v": jax.tree.map(lambda p: jnp.zeros(p.shape, sdt), params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g
+            v32 = v.astype(jnp.float32) * b2 + (1 - b2) * g * g
+            mhat = m32 / c1
+            vhat = v32 / c2
+            step = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay and p.ndim >= 2:   # no decay on norms/biases
+                step = step + weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * step
+            return new_p.astype(p.dtype), m32.astype(sdt), v32.astype(sdt)
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"m": new_m, "v": new_v, "count": count}
+
+    return Optimizer(init=init, update=update)

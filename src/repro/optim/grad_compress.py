@@ -1,0 +1,66 @@
+"""Int8 error-feedback gradient compression for data-parallel reduction.
+
+Scheme (1-bit-SGD lineage, adapted to int8 + psum):
+  * carry a per-parameter error buffer e;
+  * quantize (g + e) to int8 with a per-tensor scale chosen so that the
+    *sum over D replicas* cannot overflow int8 (scale = max|x|·D/127 — the
+    psum wire dtype stays int8, giving 4× fewer bytes on the DP axis than
+    f32 and 2× fewer than bf16);
+  * new error e' = (g + e) − dequant(quant(g + e)).
+
+Error feedback makes the quantization noise telescoping: what is lost this
+step is re-injected next step, which is why aggressive D-scaled int8
+still converges. Used by the explicit-DP train-step variant
+(``runtime.train_loop.make_train_step(..., grad_compression=True)``) via
+``shard_map``; §Perf measures the collective-byte reduction on the wire.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressionState(NamedTuple):
+    error: jax.Array
+
+
+def init_compression(params):
+    return jax.tree.map(
+        lambda p: CompressionState(jnp.zeros(p.shape, jnp.float32)), params,
+        is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def compressed_psum(g: jax.Array, err: jax.Array, axis_name,
+                    num_devices: int):
+    """One tensor: error-feedback int8 psum over ``axis_name``.
+    Returns (mean-reduced g, new error). Must run inside shard_map.
+
+    All replicas must quantize with the SAME scale (otherwise dequantizing
+    the int8 sum with an averaged scale injects O(q·Δscale) error), so the
+    scale is agreed via a scalar pmax first — negligible wire cost."""
+    x = g.astype(jnp.float32) + err
+    local_amax = jnp.max(jnp.abs(x))
+    amax = jax.lax.pmax(local_amax, axis_name)          # shared scale
+    scale = jnp.maximum(amax * num_devices / 127.0, 1e-30)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    new_err = x - q.astype(jnp.float32) * scale
+    # int8 on the wire; values are D-scaled so the sum fits int8
+    summed = jax.lax.psum(q, axis_name)
+    mean = summed.astype(jnp.float32) * scale / num_devices
+    return mean.astype(g.dtype), new_err
+
+
+def compressed_psum_tree(grads, comp_state, axis_name, num_devices):
+    """Apply compressed_psum leaf-wise; returns (grads, new comp state)."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = [l.error for l in jax.tree.leaves(
+        comp_state, is_leaf=lambda x: isinstance(x, CompressionState))]
+    out_g, out_e = [], []
+    for g, e in zip(flat_g, flat_e):
+        gg, ee = compressed_psum(g, e, axis_name, num_devices)
+        out_g.append(gg)
+        out_e.append(CompressionState(ee))
+    return (jax.tree.unflatten(treedef, out_g),
+            jax.tree.unflatten(treedef, out_e))

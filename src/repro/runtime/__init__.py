@@ -1,0 +1,3 @@
+from repro.runtime import sharding
+from repro.runtime.train_loop import make_train_step, make_train_state
+from repro.runtime.serve_loop import make_prefill_step, make_decode_step

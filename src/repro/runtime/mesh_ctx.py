@@ -1,0 +1,67 @@
+"""Trace-time mesh context: lets model internals pin activation shardings
+without threading a Mesh through every signature.
+
+The step factories (train_loop/serve_loop) enter ``with mesh_context(mesh)``
+around the model call while *tracing*; ``constrain(x, *symbols)`` becomes a
+``with_sharding_constraint`` against the active mesh (no-op when unsharded).
+
+Symbols: "batch" → the combined FSDP/data axes, "tensor" → the model axis,
+None → replicated. Dims whose size does not divide the axis fall back to
+None (same contract as runtime.sharding)."""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+import jax
+
+_STATE = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+def current_profile() -> str:
+    return getattr(_STATE, "profile", "2d")
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Optional[Mesh], profile: str = "2d"):
+    prev, prev_p = current_mesh(), current_profile()
+    _STATE.mesh, _STATE.profile = mesh, profile
+    try:
+        yield
+    finally:
+        _STATE.mesh, _STATE.profile = prev, prev_p
+
+
+def _axes(mesh: Mesh):
+    from repro.runtime.sharding import mesh_axes
+    return mesh_axes(mesh, current_profile())
+
+
+def constrain(x, *symbols):
+    """Apply a symbolic sharding constraint if a mesh is active."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    fsdp, tensor = _axes(mesh)
+    spec = []
+    for dim, sym in enumerate(symbols):
+        if sym == "batch" and fsdp:
+            size = int(np.prod([mesh.shape[a] for a in fsdp]))
+            spec.append((fsdp if len(fsdp) > 1 else fsdp[0])
+                        if x.shape[dim] % size == 0 and x.shape[dim] > 1
+                        else None)
+        elif sym == "tensor" and tensor:
+            spec.append(tensor if x.shape[dim] % mesh.shape[tensor] == 0
+                        else None)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,51 @@
+"""Serving step factories: prefill + decode with sharded KV caches.
+
+``decode_step`` donates the cache buffers (in-place update on device) and
+keeps them sharded per ``runtime.sharding.infer_cache_specs`` — batch over
+the data axis (or sequence for batch-1 long-context), heads/latent dims
+over the tensor axis.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.model import BuiltModel
+from repro.runtime import sharding as shd
+
+
+def make_prefill_step(model: BuiltModel, mesh: Optional[Mesh] = None,
+                      max_len: int = 0):
+    def prefill_step(params, batch):
+        from repro.runtime.mesh_ctx import mesh_context
+        with mesh_context(mesh):
+            logits, caches = model.prefill(params, batch, max_len=max_len)
+        return logits, caches
+    return prefill_step
+
+
+def make_decode_step(model: BuiltModel, mesh: Optional[Mesh] = None):
+    def decode_step(params, batch, caches, index):
+        from repro.runtime.mesh_ctx import mesh_context
+        with mesh_context(mesh):
+            logits, new_caches = model.decode(params, batch, caches, index)
+        # greedy token for the serving loop (sampling lives client-side)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, logits, new_caches
+    return decode_step
+
+
+def jit_decode_step(model: BuiltModel, mesh: Mesh, params, caches,
+                    batch_specs):
+    pspecs = shd.infer_param_specs(params, mesh)
+    cspecs = shd.infer_cache_specs(caches, mesh)
+    step = make_decode_step(model, mesh)
+    in_sh = (shd.named(pspecs, mesh), shd.named(batch_specs, mesh),
+             shd.named(cspecs, mesh), None)
+    out_sh = (None, None, shd.named(cspecs, mesh))
+    return jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                   donate_argnums=(2,))

@@ -1,0 +1,162 @@
+"""Training step factory: loss, gradient accumulation, optimizer, sharding.
+
+The step is a single XLA program:
+  * causal-LM cross-entropy computed on *tensor-sharded* logits (the vocab
+    axis never materializes unsharded — with 128k–256k vocabularies this is
+    the difference between fitting and OOM);
+  * gradient accumulation as a ``lax.scan`` over microbatches — under FSDP
+    sharding XLA overlaps each microbatch's reduce-scatter with the next
+    microbatch's compute (latency-hiding scheduler);
+  * optimizer states inherit parameter shardings (ZeRO-3);
+  * optional int8 error-feedback gradient compression on the DP axis
+    (explicit shard_map reduction, see optim.grad_compress).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models.model import BuiltModel
+from repro.optim import get_optimizer
+from repro.optim.schedule import warmup_cosine
+from repro.runtime import sharding as shd
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       z_loss: float = 1e-4, mesh: Optional[Mesh] = None,
+                       profile: str = "2d"):
+    """Mean token cross-entropy (+ z-loss). logits may be vocab-sharded;
+    the log-sum-exp reductions stay sharded under GSPMD."""
+    if mesh is not None:
+        logits = jax.lax.with_sharding_constraint(
+            logits, NamedSharding(mesh, shd.logits_spec(mesh, profile)))
+    logits = logits.astype(jnp.float32)
+    # align: some families prepend non-text positions (vlm patches)
+    S = labels.shape[1]
+    logits = logits[:, -S:]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    mask = (labels >= 0).astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll * mask).sum() / denom
+    if z_loss:
+        loss = loss + z_loss * ((lse * mask) ** 2).sum() / denom
+    return loss
+
+
+def make_train_state(model: BuiltModel, train_cfg: TrainConfig,
+                     key: jax.Array) -> Dict[str, Any]:
+    params = model.init(key)
+    opt = get_optimizer(train_cfg)
+    return {"params": params, "opt": opt.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def state_specs(state, mesh: Mesh, profile: str = "2d"):
+    return {
+        "params": shd.infer_param_specs(state["params"], mesh, profile),
+        "opt": shd.infer_param_specs(state["opt"], mesh, profile),
+        "step": P(),
+    }
+
+
+def make_train_step(model: BuiltModel, train_cfg: TrainConfig,
+                    mesh: Optional[Mesh] = None, profile: str = "2d"):
+    """Returns ``train_step(state, batch) -> (state, metrics)``.
+
+    ``batch`` leaves have leading dim ``global_batch``; with
+    ``train_cfg.microbatches > 1`` they are split and scanned.
+    """
+    cfg = model.cfg
+    opt = get_optimizer(train_cfg)
+    lr_fn = warmup_cosine(train_cfg.learning_rate, train_cfg.warmup_steps,
+                          train_cfg.total_steps)
+    M = train_cfg.microbatches
+
+    def loss_fn(params, mb):
+        from repro.runtime.mesh_ctx import mesh_context
+        with mesh_context(mesh, profile):
+            logits = model.train_logits(params, mb)
+        return cross_entropy_loss(logits, mb["labels"], train_cfg.z_loss,
+                                  mesh, profile)
+
+    def constrain_like_params(tree, params):
+        """Pin gradient(-accumulator) sharding to the parameter sharding —
+        without this the microbatch-scan carry defaults to replicated and
+        the f32 accumulator of a 480B model is ~1.9 TB *per device* (caught
+        by the dry-run memory analysis; see EXPERIMENTS.md §Perf)."""
+        if mesh is None:
+            return tree
+        specs = shd.infer_param_specs(params, mesh, profile)
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, s)),
+            tree, specs)
+
+    def grads_of(params, batch):
+        if M == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            return loss, constrain_like_params(grads, params)
+
+        def split(name, x):
+            if name == "positions3":   # (3, B, S): batch is axis 1
+                return jnp.moveaxis(
+                    x.reshape(3, M, x.shape[1] // M, *x.shape[2:]), 0, 1)
+            return x.reshape(M, x.shape[0] // M, *x.shape[1:])
+
+        mbs = {k: split(k, v) for k, v in batch.items()}
+        zero = constrain_like_params(
+            jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            params)
+
+        def body(acc, mb):
+            loss_acc, g_acc = acc
+            loss, g = jax.value_and_grad(loss_fn)(params, mb)
+            g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                 g_acc, g)
+            g_acc = constrain_like_params(g_acc, params)
+            return (loss_acc + loss, g_acc), None
+
+        (loss_sum, grads), _ = jax.lax.scan(body, (jnp.float32(0), zero),
+                                            mbs)
+        grads = jax.tree.map(lambda g: g / M, grads)
+        return loss_sum / M, grads
+
+    def train_step(state, batch):
+        params = state["params"]
+        loss, grads = grads_of(params, batch)
+        # global-norm clip. NOTE: sum-of-squares per leaf, NOT vdot —
+        # vdot ravels each grad, and flattening a sharded tensor forces a
+        # full all-gather (f32 grads replicated per device: +1.9 TB/device
+        # on arctic-480b; caught by the dry-run — EXPERIMENTS.md §Perf).
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, train_cfg.grad_clip
+                            / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: (g * scale).astype(jnp.float32),
+                             grads)
+        lr = lr_fn(state["step"])
+        new_params, new_opt = opt.update(grads, state["opt"], params, lr)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return new_state, metrics
+
+    return train_step
+
+
+def jit_train_step(model: BuiltModel, train_cfg: TrainConfig, mesh: Mesh,
+                   state, batch_specs):
+    """jit with explicit in/out shardings for the dry-run and launcher."""
+    step = make_train_step(model, train_cfg, mesh)
+    sspecs = state_specs(state, mesh)
+    in_sh = (shd.named(sspecs, mesh), shd.named(batch_specs, mesh))
+    out_sh = (shd.named(sspecs, mesh), None)
+    return jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                   donate_argnums=(0,))

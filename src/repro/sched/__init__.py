@@ -1,0 +1,7 @@
+from repro.sched.tasks import TaskSpec, Scenario, make_scenario
+from repro.sched.simulator import Simulator, SimConfig, SimResult
+from repro.sched.schedulers import (SCHEDULERS, IMMSchedScheduler,
+                                    IsoSchedScheduler, LTSScheduler,
+                                    get_scheduler)
+from repro.sched.metrics import (latency_bound_throughput, speedup_table,
+                                 energy_efficiency)

@@ -1,0 +1,70 @@
+"""Evaluation metrics (paper §4.1.4): Speedup, LBT, Energy efficiency."""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.accel.platform import Platform
+from repro.sched.simulator import SimConfig, SimResult, Simulator
+from repro.sched.schedulers import get_scheduler
+from repro.sched.tasks import Scenario, make_scenario
+
+
+def run_all(scenario: Scenario, platform: Platform,
+            schedulers: Sequence[str],
+            matcher_mode: str = "analytic") -> Dict[str, SimResult]:
+    out = {}
+    for name in schedulers:
+        cfg = SimConfig(platform=platform, matcher_mode=matcher_mode)
+        out[name] = Simulator(cfg, get_scheduler(name)).run(scenario)
+    return out
+
+
+def speedup_table(results: Dict[str, SimResult],
+                  ours: str = "immsched") -> Dict[str, float]:
+    """Speedup of ``ours`` vs each baseline: ratio of mean total task
+    latency (scheduling + queueing + execution), following IsoSched."""
+    base = results[ours].avg_total_latency
+    return {name: r.avg_total_latency / max(base, 1e-12)
+            for name, r in results.items() if name != ours}
+
+
+def energy_efficiency(results: Dict[str, SimResult],
+                      ours: str = "immsched") -> Dict[str, float]:
+    """Improvement in per-task work energy (exec + scheduling) of ``ours``
+    vs each baseline — throughput per joule, following the paper."""
+    mine = results[ours].work_energy_per_task
+    return {name: r.work_energy_per_task / max(mine, 1e-18)
+            for name, r in results.items() if name != ours}
+
+
+def latency_bound_throughput(scheduler_name: str, platform: Platform,
+                             complexity: str, *,
+                             hit_target: float = 0.95,
+                             horizon: float = 1.0,
+                             lo: float = 1.0, hi: float = 4096.0,
+                             iters: int = 9, seed: int = 0) -> float:
+    """Max Poisson arrival rate (QPS) sustaining ≥ ``hit_target`` urgent
+    deadline hit-rate — binary search over λ (paper: LBT = 1/λ*)."""
+
+    def ok(rate: float) -> bool:
+        sc = make_scenario(complexity, rate_hz=rate, horizon=horizon,
+                           seed=seed)
+        if not sc.tasks:
+            return True
+        cfg = SimConfig(platform=platform, matcher_mode="analytic")
+        res = Simulator(cfg, get_scheduler(scheduler_name)).run(sc)
+        finished_frac = res.finished / max(res.total, 1)
+        return (res.urgent_hit_rate >= hit_target
+                and finished_frac >= hit_target)
+
+    if not ok(lo):
+        return lo
+    for _ in range(iters):
+        mid = (lo * hi) ** 0.5          # geometric bisection
+        if ok(mid):
+            lo = mid
+        else:
+            hi = mid
+    return lo

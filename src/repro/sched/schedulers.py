@@ -1,0 +1,406 @@
+"""Schedulers: IMMSched + the five baselines of the paper's evaluation.
+
+Every scheduler implements ``on_event(sim, now, tasks, trigger, arrived)``
+and returns a decision dict::
+
+    {"alloc":   {task_id: [engine ids]},
+     "preempt": [task_id, ...],
+     "delay":   {task_id: seconds},       # scheduling latency seen by task
+     "energy":  joules}                   # scheduling energy
+
+Protocol: ``arrival``/``completion`` triggers may charge scheduling cost
+(latency via "delay" + energy); ``activate`` triggers are cost-free
+dispatch of tasks whose scheduling delay has elapsed. Engines freed for a
+delayed urgent task are *reserved* until it activates so preempted victims
+cannot bounce back onto them.
+
+Paradigms:
+  * IMMSched      — TSS, interruptible: subgraph matching ON the accelerator
+                    (parallel PSO-Ullmann; μs-scale), adaptive preemption
+                    ratio + largest-slack victim selection.
+  * IsoSched-like — TSS, preemptive: *serial* Ullmann matching on the host
+                    CPU (ms-scale, grows with query size).
+  * PREMA-like    — LTS, exclusive array, token-priority time-multiplexing.
+  * Planaria-like — LTS, spatial fission, heavy online layout search.
+  * MoCA-like     — LTS, fission + memory-contention awareness.
+  * CD-MSA-like   — LTS, EDF cooperative with cross-layer overlap.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Set
+
+import numpy as np
+
+from repro.core import interrupts, preemptible_dag, ullmann
+from repro.core.graphs import compatibility_mask
+from repro.core.matcher import IMMSchedMatcher
+from repro.accel.target_graph import free_engine_graph
+
+_EPS = 1e-15
+
+
+def _empty_decision():
+    return {"alloc": {}, "preempt": [], "delay": {}, "energy": 0.0}
+
+
+class SchedulerBase:
+    name = "base"
+    paradigm = "tss"
+    overlap = 0.0
+
+    def reset(self, sim):
+        self.cpu_free_at = 0.0
+        self._pdag_cache: Dict = {}
+        self._reserved: Dict[int, List[int]] = {}   # task_id -> engines
+
+    # -- engine bookkeeping ------------------------------------------------
+
+    def _free_engines(self, sim, tasks) -> List[int]:
+        used: Set[int] = set()
+        for t in tasks:
+            if t.status == "running":
+                used.update(t.engines)
+        # drop stale reservations, keep live ones out of the free pool
+        for tid in list(self._reserved):
+            if tasks[tid].status != "ready":
+                del self._reserved[tid]
+        for engines in self._reserved.values():
+            used.update(engines)
+        return [e for e in range(sim.platform.engines) if e not in used]
+
+    def _waiting(self, tasks):
+        return sorted([t for t in tasks if t.status == "ready"],
+                      key=lambda t: (-t.spec.priority, t.spec.arrival))
+
+    def _dispatch(self, sim, now, tasks, decision=None):
+        """Cost-free work-conserving dispatch of ready, delay-elapsed tasks:
+        reserved engines first, then the free pool."""
+        decision = decision or _empty_decision()
+        free = self._free_engines(sim, tasks)
+        for v in decision["alloc"].values():
+            free = [e for e in free if e not in set(v)]
+        for t in self._waiting(tasks):
+            if t.spec.task_id in decision["alloc"]:
+                continue
+            if now < t.ready_at - _EPS or \
+                    t.spec.task_id in decision["delay"]:
+                continue
+            engines = self._reserved.pop(t.spec.task_id, [])
+            engines = [e for e in engines
+                       if e in free or e not in self._all_running(tasks)]
+            if not engines:
+                if not free:
+                    continue
+                engines = free[:min(t.par_cap, len(free))]
+            engines = engines[:t.par_cap]
+            free = [e for e in free if e not in set(engines)]
+            if engines:
+                decision["alloc"][t.spec.task_id] = engines
+        return decision
+
+    @staticmethod
+    def _all_running(tasks) -> Set[int]:
+        out: Set[int] = set()
+        for t in tasks:
+            if t.status == "running":
+                out.update(t.engines)
+        return out
+
+    # -- query-window construction ------------------------------------------
+
+    def _pdag(self, sim, task):
+        key = (task.spec.name, sim.cfg.window_stages)
+        if key not in self._pdag_cache:
+            cap = sim.platform.engine_tile_capacity_macs()
+            self._pdag_cache[key] = preemptible_dag.build_preemptible_dag(
+                [(task.spec.task_id, task.spec.workload, 0)],
+                tile_capacity_macs=cap,
+                window_stages=sim.cfg.window_stages)
+        return self._pdag_cache[key]
+
+    def _window_tiles(self, sim, task) -> int:
+        return max(self._pdag(sim, task).n, 1)
+
+
+# ---------------------------------------------------------------------------
+# TSS schedulers
+# ---------------------------------------------------------------------------
+
+class IMMSchedScheduler(SchedulerBase):
+    name = "immsched"
+    paradigm = "tss"
+
+    def __init__(self, quantized: bool = True):
+        self.quantized = quantized
+
+    def on_event(self, sim, now, tasks, trigger, arrived=None):
+        if trigger == "activate":
+            return self._dispatch(sim, now, tasks)
+        decision = _empty_decision()
+        if trigger == "arrival" and arrived is not None:
+            if arrived.spec.urgent:
+                self._interrupt(sim, now, tasks, arrived, decision)
+            else:
+                n = self._window_tiles(sim, arrived)
+                st, se = sim.cost.sched_immsched(
+                    min(n, 64), sim.platform.engines, sim.cfg.pso_cfg,
+                    max(min(n, sim.platform.engines) // 2, 1))
+                decision["delay"][arrived.spec.task_id] = st
+                decision["energy"] += se
+        elif trigger == "completion":
+            waiting = self._waiting(tasks)
+            if waiting:
+                n = self._window_tiles(sim, waiting[0])
+                st, se = sim.cost.sched_immsched(
+                    min(n, 64), sim.platform.engines, sim.cfg.pso_cfg,
+                    max(min(n, sim.platform.engines) // 2, 1))
+                decision["delay"][waiting[0].spec.task_id] = st
+                decision["energy"] += se
+        return self._dispatch(sim, now, tasks, decision)
+
+    def _interrupt(self, sim, now, tasks, urgent, decision):
+        running = [
+            interrupts.RunningTask(
+                task_id=t.spec.task_id, priority=t.spec.priority,
+                engines=list(t.engines),
+                remaining_time=t.remaining_time(len(t.engines)),
+                deadline=t.spec.deadline, live_bytes=t.live_bytes)
+            for t in tasks if t.status == "running"]
+        free = self._free_engines(sim, tasks)
+        n = self._window_tiles(sim, urgent)
+        est_exec = urgent.remaining_time(min(n, sim.platform.engines))
+        ratio = interrupts.adaptive_preemption_ratio(
+            est_exec, urgent.spec.deadline - now)
+        need = interrupts.engines_needed_for(n, sim.platform.engines, ratio)
+        dec = interrupts.select_victims(running, free, need,
+                                        urgent.spec.priority, now)
+        engines = dec.freed_engines[:need]
+        m = max(len(dec.freed_engines), 1)
+        st, se = sim.cost.sched_immsched(min(n, 64), m, sim.cfg.pso_cfg,
+                                         max(len(engines), 1))
+        if sim.cfg.matcher_mode == "real":
+            mapped = self._real_match(sim, urgent, dec.freed_engines)
+            if mapped:
+                engines = mapped[:max(need, 1)]
+        decision["preempt"].extend(dec.victims)
+        decision["delay"][urgent.spec.task_id] = st
+        decision["energy"] += se
+        self._reserved[urgent.spec.task_id] = engines
+
+    def _real_match(self, sim, urgent, freed) -> Optional[List[int]]:
+        pd = self._pdag(sim, urgent)
+        tgt = free_engine_graph(sim.platform, [
+            e in set(freed) for e in range(sim.platform.engines)])
+        if pd.n == 0 or tgt.n < 4:
+            return None
+        q = pd.graph
+        if q.n > tgt.n:
+            keep = np.sort(np.argsort([t.stage for t in pd.tiles])[:tgt.n])
+            q = type(q)(adj=q.adj[np.ix_(keep, keep)], types=q.types[keep],
+                        weights=q.weights[keep])
+        cfg = sim.cfg.pso_cfg.replace(quantized=self.quantized)
+        res = IMMSchedMatcher(cfg).match(q, tgt)
+        if not res.found:
+            return None
+        engine_ids = tgt.weights.astype(int)
+        _, cols = np.where(res.mapping)
+        return [int(engine_ids[c]) for c in cols]
+
+
+class IsoSchedScheduler(SchedulerBase):
+    """TSS + preemption, but scheduling = serial Ullmann on the host CPU."""
+    name = "isosched"
+    paradigm = "tss"
+
+    def on_event(self, sim, now, tasks, trigger, arrived=None):
+        if trigger == "activate":
+            return self._dispatch(sim, now, tasks)
+        decision = _empty_decision()
+        target = None
+        if trigger == "arrival" and arrived is not None:
+            target = arrived
+            if arrived.spec.urgent:
+                running = [
+                    interrupts.RunningTask(
+                        task_id=t.spec.task_id, priority=t.spec.priority,
+                        engines=list(t.engines),
+                        remaining_time=t.remaining_time(len(t.engines)),
+                        deadline=t.spec.deadline, live_bytes=t.live_bytes)
+                    for t in tasks if t.status == "running"]
+                free = self._free_engines(sim, tasks)
+                n = self._window_tiles(sim, arrived)
+                need = interrupts.engines_needed_for(
+                    n, sim.platform.engines, 1.0)
+                dec = interrupts.select_victims(
+                    running, free, need, arrived.spec.priority, now)
+                decision["preempt"].extend(dec.victims)
+                self._reserved[arrived.spec.task_id] = \
+                    dec.freed_engines[:need]
+        elif trigger == "completion":
+            waiting = self._waiting(tasks)
+            target = waiting[0] if waiting else None
+        if target is not None:
+            st, se = self._serial_match_cost(sim, target, now)
+            decision["delay"][target.spec.task_id] = st
+            decision["energy"] += se
+        return self._dispatch(sim, now, tasks, decision)
+
+    def _serial_match_cost(self, sim, task, now):
+        n = self._window_tiles(sim, task)
+        m = sim.platform.engines
+        if sim.cfg.matcher_mode == "real":
+            pd = self._pdag(sim, task)
+            tgt = free_engine_graph(sim.platform,
+                                    [True] * sim.platform.engines)
+            q = pd.graph
+            if q.n > tgt.n:
+                keep = np.sort(np.argsort(
+                    [t.stage for t in pd.tiles])[:tgt.n])
+                q = type(q)(adj=q.adj[np.ix_(keep, keep)],
+                            types=q.types[keep], weights=q.weights[keep])
+            stats = ullmann.SerialStats()
+            mask = compatibility_mask(q, tgt)
+            ullmann.serial_ullmann(q.adj, tgt.adj, mask, max_solutions=1,
+                                   stats=stats)
+            mac_ops, nodes = stats.mac_ops, stats.nodes_visited
+        else:
+            # calibrated against serial_ullmann stats on planted windows
+            nodes = 0.3 * n
+            sweeps_per_node = 2.0
+            mac_ops = nodes * sweeps_per_node * (
+                2 * n * m * m + 2 * n * n * m)
+        st, se = sim.cost.sched_serial_cpu(mac_ops, int(nodes))
+        # single host CPU: queue behind earlier scheduling work
+        start = max(self.cpu_free_at, now)
+        self.cpu_free_at = start + st
+        return (start - now) + st, se
+
+
+# ---------------------------------------------------------------------------
+# LTS baselines
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LTSVariant:
+    name: str
+    fission: bool            # spatial sharing (Planaria/MoCA/CD-MSA)
+    overlap: float           # cross-layer overlap factor (CD-MSA)
+    mem_contention: float    # serial-bucket penalty per co-runner
+    sched_scale: float       # online scheduling latency multiplier
+
+
+LTS_VARIANTS = {
+    "prema": LTSVariant("prema", fission=False, overlap=0.0,
+                        mem_contention=0.0, sched_scale=0.45),
+    "planaria": LTSVariant("planaria", fission=True, overlap=0.0,
+                           mem_contention=0.20, sched_scale=1.3),
+    "moca": LTSVariant("moca", fission=True, overlap=0.0,
+                       mem_contention=0.05, sched_scale=0.42),
+    "cdmsa": LTSVariant("cdmsa", fission=True, overlap=0.3,
+                        mem_contention=0.15, sched_scale=0.85),
+}
+
+
+class LTSScheduler(SchedulerBase):
+    paradigm = "lts"
+
+    def __init__(self, variant: str):
+        self.variant = LTS_VARIANTS[variant]
+        self.name = variant
+        self.overlap = self.variant.overlap
+
+    def _sched_cost(self, sim, tasks, now):
+        """Online re-scheduling on the host CPU: LTS frameworks re-solve a
+        layout/partition optimization per decision (paper Fig. 2a — often
+        orders of magnitude longer than the execution itself)."""
+        n_layers = int(np.mean(
+            [len(t.spec.workload.layers) for t in tasks
+             if not t.done] or [32]))
+        work_ops = 2.0e5 * n_layers * sim.platform.engines / 64.0
+        t = (work_ops / (sim.platform.cpu_gops * 1e9)
+             + 2e-3) * self.variant.sched_scale
+        start = max(self.cpu_free_at, now)
+        self.cpu_free_at = start + t
+        return (start - now) + t, t * sim.cost.cpu_watts
+
+    def on_event(self, sim, now, tasks, trigger, arrived=None):
+        if trigger == "activate":
+            return (self._dispatch(sim, now, tasks)
+                    if not self.variant.fission
+                    else self._fission_alloc(sim, now, tasks, None))
+        decision = _empty_decision()
+        waiting = self._waiting(tasks)
+        if not waiting and trigger != "completion":
+            return decision
+        st, se = self._sched_cost(sim, tasks, now)
+        decision["energy"] = se
+
+        if not self.variant.fission:
+            # PREMA: exclusive array, priority time-multiplexing
+            if not waiting:
+                return self._dispatch(sim, now, tasks, decision)
+            best = waiting[0]
+            running = [t for t in tasks if t.status == "running"]
+            if running:
+                cur = running[0]
+                if best.spec.priority <= cur.spec.priority:
+                    return decision
+                decision["preempt"].append(cur.spec.task_id)
+            decision["delay"][best.spec.task_id] = st
+            self._reserved[best.spec.task_id] = list(
+                range(sim.platform.engines))
+            return decision
+
+        # fission variants: recompute proportional spatial shares
+        if arrived is not None:
+            decision["delay"][arrived.spec.task_id] = st
+        return self._fission_alloc(sim, now, tasks, decision)
+
+    def _fission_alloc(self, sim, now, tasks, decision):
+        decision = decision or _empty_decision()
+        active = [t for t in tasks if t.status in ("running", "ready")]
+        if self.name == "cdmsa":
+            active.sort(key=lambda t: t.spec.deadline)        # EDF
+        else:
+            active.sort(key=lambda t: (-t.spec.priority, t.spec.arrival))
+        eligible = [t for t in active
+                    if t.status == "running"
+                    or (now >= t.ready_at - _EPS
+                        and t.spec.task_id not in decision["delay"])]
+        total_prio = sum(t.spec.priority for t in eligible) or 1
+        E = sim.platform.engines
+        cursor = 0
+        n_active = len(eligible)
+        for t in eligible:
+            share = max(1, int(E * t.spec.priority / total_prio))
+            share = min(share, t.par_cap, E - cursor)
+            if share <= 0:
+                break
+            engines = list(range(cursor, cursor + share))
+            cursor += share
+            if t.status == "running":
+                if set(engines) == set(t.engines):
+                    continue
+                decision["preempt"].append(t.spec.task_id)
+            decision["alloc"][t.spec.task_id] = engines
+            # memory contention under sharing
+            pen = self.variant.mem_contention * max(n_active - 1, 0)
+            if pen > 0:
+                t.ser_s *= (1.0 + pen)
+                t.work_total += 0.0
+        return decision
+
+
+SCHEDULERS = {
+    "immsched": lambda: IMMSchedScheduler(),
+    "isosched": lambda: IsoSchedScheduler(),
+    "prema": lambda: LTSScheduler("prema"),
+    "planaria": lambda: LTSScheduler("planaria"),
+    "moca": lambda: LTSScheduler("moca"),
+    "cdmsa": lambda: LTSScheduler("cdmsa"),
+}
+
+
+def get_scheduler(name: str) -> SchedulerBase:
+    return SCHEDULERS[name]()

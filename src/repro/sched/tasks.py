@@ -1,0 +1,91 @@
+"""Task specifications + scenario generation for the multi-DNN simulator.
+
+A *scenario* is a timed stream of DNN task instances: background tasks
+(periodic/known, what LTS schedulers were designed for) plus *urgent* tasks
+with unpredictable (Poisson) arrivals and tight deadlines — the open-ended
+setting the paper targets.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.workloads import WorkloadGraph, workload_complexity_class
+
+
+@dataclasses.dataclass
+class TaskSpec:
+    name: str
+    workload: WorkloadGraph
+    arrival: float
+    priority: int               # higher = more urgent
+    deadline: float             # absolute seconds
+    urgent: bool = False
+    task_id: int = -1
+
+
+@dataclasses.dataclass
+class Scenario:
+    name: str
+    tasks: List[TaskSpec]
+    horizon: float
+
+    def __post_init__(self):
+        self.tasks.sort(key=lambda t: t.arrival)
+        for i, t in enumerate(self.tasks):
+            t.task_id = i
+
+
+def make_scenario(complexity: str, *, rate_hz: float = 20.0,
+                  horizon: float = 2.0, urgent_frac: float = 0.4,
+                  deadline_slack: float = 2.0,
+                  urgent_slack: float = 1.25,
+                  base_exec_estimate: float = 5e-3,
+                  seed: int = 0) -> Scenario:
+    """Poisson stream over one complexity class (paper §4.1.2).
+
+    ``deadline_slack`` multiplies a nominal execution estimate to set
+    deadlines; urgent tasks get the tighter ``urgent_slack``.
+    """
+    rng = np.random.default_rng(seed)
+    pool = workload_complexity_class(complexity)
+    tasks: List[TaskSpec] = []
+    t = 0.0
+    while True:
+        t += rng.exponential(1.0 / rate_hz)
+        if t >= horizon:
+            break
+        wl = pool[rng.integers(len(pool))]
+        urgent = bool(rng.random() < urgent_frac)
+        slack = urgent_slack if urgent else deadline_slack
+        nominal = base_exec_estimate * (wl.total_macs / 1e9 + 0.2)
+        tasks.append(TaskSpec(
+            name=wl.name, workload=wl, arrival=float(t),
+            priority=2 if urgent else 1,
+            deadline=float(t + slack * nominal + 1e-3),
+            urgent=urgent))
+    return Scenario(name=f"{complexity}-poisson", tasks=tasks,
+                    horizon=horizon)
+
+
+def fixed_scenario(workloads: Sequence[WorkloadGraph], *,
+                   spacing: float = 1e-3,
+                   urgent_last: bool = True,
+                   deadline_slack: float = 3.0,
+                   base_exec_estimate: float = 5e-3) -> Scenario:
+    """Deterministic small scenario (tests + speedup benchmark): background
+    tasks arrive at t≈0, one urgent task arrives mid-flight."""
+    tasks = []
+    for i, wl in enumerate(workloads):
+        urgent = urgent_last and (i == len(workloads) - 1)
+        arrival = 0.0 + i * spacing if not urgent else 0.5e-3 + i * spacing
+        nominal = base_exec_estimate * (wl.total_macs / 1e9 + 0.2)
+        tasks.append(TaskSpec(
+            name=wl.name, workload=wl, arrival=arrival,
+            priority=2 if urgent else 1,
+            deadline=arrival + deadline_slack * nominal + 1e-3,
+            urgent=urgent))
+    horizon = max(t.deadline for t in tasks) * 4.0
+    return Scenario(name="fixed", tasks=tasks, horizon=horizon)

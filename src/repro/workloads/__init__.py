@@ -1,0 +1,3 @@
+from repro.workloads.layers import LayerKind, LayerSpec, WorkloadGraph
+from repro.workloads.zoo import (WORKLOAD_ZOO, get_workload,
+                                 workload_complexity_class)

@@ -1,0 +1,97 @@
+"""End-to-end matcher tests: Algorithm 1 finds planted subgraph matchings,
+agrees with the serial Ullmann baseline and the exhaustive oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import graphs, pso, ullmann
+from repro.core.matcher import IMMSchedMatcher
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _planted(seed, n, m, edge_prob=0.35):
+    key = jax.random.PRNGKey(seed)
+    kq, kt = jax.random.split(key)
+    q = graphs.random_dag(kq, n, edge_prob)
+    g = graphs.embed_query_in_target(kt, q, m)
+    return q, g
+
+
+def _check_mapping(mapping, q, g):
+    assert mapping is not None
+    M = np.asarray(mapping, dtype=np.int64)
+    assert (M.sum(axis=1) == 1).all()
+    assert (M.sum(axis=0) <= 1).all()
+    covered = M @ g.adj.astype(np.int64) @ M.T
+    assert (covered >= q.adj).all()
+
+
+@pytest.mark.parametrize("seed,n,m", [(0, 6, 12), (1, 8, 16), (2, 10, 24)])
+def test_matcher_finds_planted_match(seed, n, m):
+    q, g = _planted(seed, n, m)
+    # planted instances can have a UNIQUE monomorphism — give the
+    # swarm a realistic budget (the paper runs 128 engines × particles)
+    cfg = pso.PSOConfig(num_particles=96, epochs=6, inner_steps=10)
+    res = IMMSchedMatcher(cfg).match(q, g, key=jax.random.PRNGKey(seed))
+    assert res.found, f"no feasible mapping found (f*={res.f_star})"
+    _check_mapping(res.mapping, q, g)
+
+
+def test_matcher_quantized_mode_finds_match():
+    q, g = _planted(3, 8, 16)
+    cfg = pso.PSOConfig(num_particles=48, epochs=4, inner_steps=10,
+                        quantized=True)
+    res = IMMSchedMatcher(cfg).match(q, g, key=jax.random.PRNGKey(3))
+    assert res.found
+    _check_mapping(res.mapping, q, g)
+
+
+def test_serial_ullmann_agrees_with_oracle():
+    q, g = _planted(4, 6, 10)
+    mask = graphs.compatibility_mask(q, g)
+    sols = ullmann.serial_ullmann(q.adj, g.adj, mask, max_solutions=5)
+    assert sols, "serial Ullmann must find the planted match"
+    for M in sols:
+        _check_mapping(M, q, g)
+    # oracle agreement on feasibility existence
+    assert ullmann.count_monomorphisms(q.adj, g.adj, mask, limit=10) > 0
+
+
+def test_serial_ullmann_rejects_impossible():
+    # query = triangle-ish chain longer than the target path
+    q = graphs.line_graph(5)
+    g = graphs.line_graph(3)
+    mask = np.ones((5, 3), dtype=np.uint8)
+    assert ullmann.serial_ullmann(q.adj, g.adj, mask) == []
+    assert ullmann.count_monomorphisms(q.adj, g.adj) == 0
+
+
+def test_matcher_reports_infeasible():
+    q = graphs.line_graph(6)
+    g = graphs.line_graph(4)
+    cfg = pso.PSOConfig(num_particles=16, epochs=2, inner_steps=6)
+    res = IMMSchedMatcher(cfg).match(q, g)
+    assert not res.found
+
+
+def test_fitness_trace_monotone():
+    """The global-best trace must be non-decreasing within an epoch
+    (stability property the continuous relaxation buys — Fig. 2b)."""
+    q, g = _planted(5, 8, 16)
+    Q, G, mask = graphs.as_device_graphs(q, g)
+    cfg = pso.PSOConfig(num_particles=32, epochs=3, inner_steps=8)
+    outs = pso.match(jax.random.PRNGKey(0), Q, G, mask, cfg)
+    trace = np.asarray(outs["f_star_trace"])  # (T, K)
+    for t in range(trace.shape[0]):
+        assert (np.diff(trace[t]) >= -1e-5).all()
+
+
+def test_masked_entries_never_assigned():
+    q, g = _planted(6, 8, 16)
+    mask = graphs.compatibility_mask(q, g)
+    cfg = pso.PSOConfig(num_particles=32, epochs=3, inner_steps=8)
+    res = IMMSchedMatcher(cfg).match(q, g, key=jax.random.PRNGKey(1))
+    if res.found:
+        assert (np.asarray(res.mapping) <= mask).all()

@@ -1,0 +1,70 @@
+"""Workload zoo + preemptible DAG property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.accel import EDGE
+from repro.configs import ARCHS, get_config
+from repro.core import preemptible_dag
+from repro.workloads import WORKLOAD_ZOO, get_workload
+from repro.workloads.zoo import lm_workload_from_config
+
+
+@pytest.mark.parametrize("name", sorted(WORKLOAD_ZOO))
+def test_zoo_graphs_valid(name):
+    wg = get_workload(name)
+    wg.validate()
+    assert wg.total_macs > 1e6
+    assert wg.total_bytes > 1e3
+    adj = wg.adjacency()
+    # weakly connected-ish: no fully isolated compute layer
+    iso = (adj.sum(0) + adj.sum(1)) == 0
+    assert iso.sum() <= 1, f"{name} has isolated layers"
+
+
+def test_complexity_ordering():
+    """Complex (LLM) workloads must carry more MACs than Simple ones."""
+    simple = get_workload("mobilenetv2").total_macs
+    complex_ = get_workload("llama3-8b-wl").total_macs
+    assert complex_ > 5 * simple
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_every_arch_lowers_to_scheduler_workload(arch):
+    """The bridge: all 10 assigned architectures are schedulable."""
+    wl = lm_workload_from_config(get_config(arch), block_group=2)
+    wl.validate()
+    cap = EDGE.engine_tile_capacity_macs()
+    pd = preemptible_dag.build_preemptible_dag(
+        [(0, wl, 0)], tile_capacity_macs=cap, window_stages=2)
+    assert pd.n > 0
+    assert pd.graph.is_dag()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 8))
+def test_window_monotone_in_stages(window, max_split):
+    wl = get_workload("resnet50")
+    cap = EDGE.engine_tile_capacity_macs()
+    pd1 = preemptible_dag.build_preemptible_dag(
+        [(0, wl, 0)], tile_capacity_macs=cap, window_stages=window,
+        max_split=max_split)
+    pd2 = preemptible_dag.build_preemptible_dag(
+        [(0, wl, 0)], tile_capacity_macs=cap, window_stages=window + 1,
+        max_split=max_split)
+    assert pd2.n >= pd1.n
+    # tiles carry positive work and valid stages
+    for t in pd1.tiles:
+        assert t.macs > 0
+        assert 0 <= t.stage < window
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 5))
+def test_progress_shrinks_remaining_window(progress):
+    wl = get_workload("mobilenetv2")
+    cap = EDGE.engine_tile_capacity_macs()
+    pd = preemptible_dag.build_preemptible_dag(
+        [(0, wl, progress)], tile_capacity_macs=cap, window_stages=3)
+    for t in pd.tiles:
+        assert progress <= t.stage < progress + 3
