@@ -152,7 +152,10 @@ def fig2b_relaxation() -> List[tuple]:
     q = graphs.random_dag(kq, 10, 0.3)
     g = graphs.embed_query_in_target(kt, q, 24)
     Q, G, mask = graphs.as_device_graphs(q, g)
-    cfg = pso.PSOConfig(num_particles=32, epochs=3, inner_steps=12)
+    # prune_mask off: this figure studies the swarm's relaxation dynamics,
+    # which the global Ullmann+injectivity pre-prune would short-circuit
+    cfg = pso.PSOConfig(num_particles=32, epochs=3, inner_steps=12,
+                        prune_mask=False)
 
     def trace_stats(hard_project: bool):
         finals, improvements = [], []

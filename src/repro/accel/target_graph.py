@@ -30,7 +30,13 @@ def target_graph(platform: Platform,
 def free_engine_graph(platform: Platform, free: Sequence[bool],
                       bidirectional: bool = True) -> graphs.Graph:
     """Subgraph of the engine array restricted to free engines, preserving
-    original engine indices via ``weights`` (weights[i] = engine id)."""
+    original engine indices via ``weights`` (weights[i] = engine id).
+
+    Vertices keep ascending engine-id order, so two calls with the same
+    free set produce byte-identical graphs — the stability the online
+    matcher service's shape-bucketed compile cache and content-hashed
+    warm-start keys rely on.
+    """
     full = target_graph(platform, bidirectional)
     free = np.asarray(free, dtype=bool)
     assert free.shape == (full.n,)
@@ -39,3 +45,12 @@ def free_engine_graph(platform: Platform, free: Sequence[bool],
     types = full.types[idx]
     return graphs.Graph(adj=adj, types=types,
                         weights=idx.astype(np.float32))
+
+
+def free_engine_signature(free: Sequence[bool]) -> bytes:
+    """Compact, stable platform-state key: the free-engine bitmask.
+
+    Used (together with the workload name) to scope the matcher service's
+    warm-start entries to a (workload, platform-state) class.
+    """
+    return np.packbits(np.asarray(free, dtype=bool)).tobytes()

@@ -225,6 +225,19 @@ def _topo_order(adj: np.ndarray) -> np.ndarray:
     return np.asarray(order, dtype=np.int64)
 
 
+def topological_relabel(g: Graph):
+    """Relabel vertices in topological order; returns (graph, order).
+
+    The constructive (adjacency-guided) projection places vertices in
+    index order and requires predecessors placed first — both the direct
+    matcher and the online service relabel queries through here so their
+    orders (and the service's content-digest warm keys) stay identical.
+    """
+    order = _topo_order(g.adj)
+    return Graph(adj=g.adj[np.ix_(order, order)], types=g.types[order],
+                 weights=g.weights[order]), order
+
+
 def as_device_graphs(query: Graph, target: Graph):
     """uint8 device copies of (Q, G, Mask) ready for the matcher."""
     mask = compatibility_mask(query, target)

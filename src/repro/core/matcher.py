@@ -27,6 +27,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import pso
 from repro.core.graphs import Graph, as_device_graphs
 from repro.kernels import ref
+from repro.runtime.sharding import get_shard_map
 
 
 @dataclasses.dataclass
@@ -38,10 +39,44 @@ class MatchResult:
     all_mappings: np.ndarray             # (T*N, n, m) projected mappings
     all_feasible: np.ndarray             # (T*N,)
     all_fitness: np.ndarray              # (T*N,)
+    carry: Optional[tuple] = None        # (S_star, f_star, S_bar) warm-start
+    epochs_run: int = 0                  # epochs executed (< T on early exit)
 
     @property
     def found(self) -> bool:
         return self.mapping is not None
+
+
+def collect_result(outs, order=None, crop=None) -> MatchResult:
+    """Host-side gather of a match-output pytree into a ``MatchResult``.
+
+    ``order``: topological relabelling to undo (rows back to caller
+    order). ``crop``: logical ``(n, m)`` to strip shape-bucket padding to
+    before undoing the relabelling (used by the online service).
+    """
+    feas = np.asarray(outs["feasible"]).reshape(-1)
+    fit = np.asarray(outs["fitness"]).reshape(-1)
+    maps = np.asarray(outs["mappings"])
+    maps = maps.reshape(-1, maps.shape[-2], maps.shape[-1])
+    if crop is not None:
+        n, m = crop
+        maps = maps[:, :n, :m]
+    if order is not None:
+        unperm = np.empty_like(maps)
+        unperm[:, order, :] = maps
+        maps = unperm
+    best = None
+    if feas.any():
+        idx = np.where(feas)[0]
+        best = maps[idx[np.argmax(fit[idx])]]
+    return MatchResult(
+        mapping=best,
+        feasible_count=int(feas.sum()),
+        f_star=float(np.asarray(outs["f_star"]).reshape(-1)[-1]),
+        f_star_trace=np.asarray(outs["f_star_trace"]),
+        all_mappings=maps, all_feasible=feas, all_fitness=fit,
+        carry=(outs["S_star"], outs["f_star"], outs["S_bar"]),
+        epochs_run=int(np.asarray(outs["epochs_run"]).reshape(-1)[-1]))
 
 
 def _fuse_global_best(S_star, f_star, axis_names):
@@ -76,24 +111,25 @@ def _fuse_consensus(S, f, cfg, axis_names):
 def build_distributed_match(Q_shape: Tuple[int, int], mesh: Mesh,
                             cfg: pso.PSOConfig,
                             axis_names: Sequence[str] = ("data",)):
-    """Returns a jit'd ``match(keys, Q, G, mask)`` running the full
+    """Returns a jit'd ``match(keys, Q, G, mask, carry0)`` running the full
     Algorithm 1 with the swarm sharded over ``axis_names`` of ``mesh``.
 
-    ``keys`` must be (num_shards,) PRNG keys (one per device slice). The
-    result pytree mirrors ``pso.match`` with a leading shard axis on the
-    per-particle outputs.
+    ``keys`` must be (num_shards,) PRNG keys (one per device slice);
+    ``carry0`` is a replicated ``(S_star, f_star, S_bar)`` warm-start (use
+    ``pso.default_carry(mask)`` for a cold start). The result pytree
+    mirrors ``pso.match`` with a leading shard axis on the per-particle
+    outputs.
     """
     axis_names = tuple(axis_names)
 
-    def local_match(key, Q, G, mask):
+    def local_match(key, Q, G, mask, carry0):
         n, m = mask.shape
-        maskf = mask.astype(jnp.float32)
-        mask_rows = maskf.sum(-1, keepdims=True)
-        S_bar0 = maskf / jnp.maximum(mask_rows, 1.0)
-        carry0 = (S_bar0, jnp.float32(-jnp.inf), S_bar0)
+        if cfg.prune_mask:
+            mask = ref.prune_mask_fixpoint(mask, Q, G, cfg.prune_iters
+                                           ).astype(mask.dtype)
         keys = jax.random.split(key[0], cfg.epochs)  # this shard's key
 
-        def epoch_step(carry, k):
+        def run_one(carry, k):
             carry, outs = pso.run_epoch(carry, k, Q, G, mask, cfg)
             S_star, f_star, _ = carry
             # ---- global controller: fuse across the mesh ----
@@ -105,20 +141,29 @@ def build_distributed_match(Q_shape: Tuple[int, int], mesh: Mesh,
                                                 axis_names)
             return (S_star, f_star, S_bar), outs
 
-        (S_star, f_star, S_bar), outs = jax.lax.scan(epoch_step, carry0, keys)
+        def all_found(found):
+            # replicate the early-exit predicate so every shard takes the
+            # same lax.cond branch (the live branch holds collectives)
+            return jax.lax.pmax(found.astype(jnp.int32), axis_names) > 0
+
+        (S_star, f_star, S_bar), outs, epochs_run = pso.scan_epochs(
+            run_one, carry0, keys, n, m, cfg, all_found=all_found)
         outs["S_star"] = S_star
         outs["f_star"] = f_star
+        outs["S_bar"] = S_bar
+        outs["epochs_run"] = epochs_run
         return outs
 
     shard_axes = P(axis_names)
-    in_specs = (shard_axes, P(), P(), P())
+    in_specs = (shard_axes, P(), P(), P(), (P(), P(), P()))
     out_specs = dict(
         mappings=P(None, axis_names), feasible=P(None, axis_names),
         fitness=P(None, axis_names), f_star_trace=P(),
-        S_star=P(), f_star=P())
+        S_star=P(), f_star=P(), S_bar=P(), epochs_run=P())
 
-    fn = jax.shard_map(local_match, mesh=mesh, in_specs=in_specs,
-                       out_specs=out_specs, check_vma=False)
+    shard_map = get_shard_map()
+    fn = shard_map(local_match, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs)
     return jax.jit(fn)
 
 
@@ -137,48 +182,26 @@ class IMMSchedMatcher:
         self.axis_names = tuple(axis_names)
 
     def match(self, query: Graph, target: Graph,
-              key: Optional[jax.Array] = None) -> MatchResult:
-        # relabel query vertices in topological order: the constructive
-        # (adjacency-guided) projection places vertices in index order and
-        # requires predecessors to be placed first
-        from repro.core.graphs import _topo_order
-        order = _topo_order(query.adj)
-        query = Graph(adj=query.adj[np.ix_(order, order)],
-                      types=query.types[order],
-                      weights=query.weights[order])
+              key: Optional[jax.Array] = None,
+              carry0=None) -> MatchResult:
+        from repro.core.graphs import topological_relabel
+        query, order = topological_relabel(query)
         self._order = order
         Q, G, mask = as_device_graphs(query, target)
         if key is None:
             key = jax.random.PRNGKey(0)
+        if carry0 is None:
+            carry0 = pso.default_carry(mask)
         if self.mesh is None:
-            outs = pso.match(key, Q, G, mask, self.cfg)
+            outs = pso.match(key, Q, G, mask, self.cfg, carry0)
         else:
             num_shards = int(np.prod([self.mesh.shape[a]
                                       for a in self.axis_names]))
             keys = jax.random.split(key, num_shards)
             fn = build_distributed_match(Q.shape, self.mesh, self.cfg,
                                          self.axis_names)
-            outs = fn(keys, Q, G, mask)
+            outs = fn(keys, Q, G, mask, carry0)
         return self._collect(outs)
 
     def _collect(self, outs) -> MatchResult:
-        feas = np.asarray(outs["feasible"]).reshape(-1)
-        fit = np.asarray(outs["fitness"]).reshape(-1)
-        maps = np.asarray(outs["mappings"])
-        maps = maps.reshape(-1, maps.shape[-2], maps.shape[-1])
-        # undo the topological relabelling (rows back to caller order)
-        order = getattr(self, "_order", None)
-        if order is not None:
-            unperm = np.empty_like(maps)
-            unperm[:, order, :] = maps
-            maps = unperm
-        best = None
-        if feas.any():
-            idx = np.where(feas)[0]
-            best = maps[idx[np.argmax(fit[idx])]]
-        return MatchResult(
-            mapping=best,
-            feasible_count=int(feas.sum()),
-            f_star=float(np.asarray(outs["f_star"]).reshape(-1)[-1]),
-            f_star_trace=np.asarray(outs["f_star_trace"]),
-            all_mappings=maps, all_feasible=feas, all_fitness=fit)
+        return collect_result(outs, order=getattr(self, "_order", None))

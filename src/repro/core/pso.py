@@ -51,6 +51,10 @@ class PSOConfig:
     refine_iters: int = 6            # Ullmann pruning sweeps
     quantized: bool = False
     backend: str = "auto"            # kernels backend
+    prune_mask: bool = True          # global Ullmann+injectivity pre-prune
+    prune_iters: int = 0             # 0 = iterate the pre-prune to fixpoint
+    early_exit: bool = False         # stop epochs once a good mapping exists
+    early_exit_fitness: float = float("-inf")   # "good" = feasible ∧ f ≥ this
 
     def replace(self, **kw) -> "PSOConfig":
         return dataclasses.replace(self, **kw)
@@ -194,33 +198,124 @@ def run_epoch(carry, key, Q, G, mask, cfg: PSOConfig):
     return (S_star, f_star, S_bar), out
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
+def default_carry(mask: jax.Array):
+    """Cold-start controller state: uniform S̄ over the mask, no best yet.
+
+    This is what every ``match`` call used before warm-starting existed;
+    the online service replaces it with the previous epoch's consensus for
+    repeat (workload, platform-state) arrivals.
+    """
+    maskf = mask.astype(jnp.float32)
+    mask_rows = maskf.sum(-1, keepdims=True)
+    S_bar0 = maskf / jnp.maximum(mask_rows, 1.0)
+    return (S_bar0, jnp.float32(-jnp.inf), S_bar0)
+
+
+def _skip_epoch_outs(carry, n, m, cfg: PSOConfig):
+    """Shape-matched placeholder outputs for an early-exited epoch."""
+    _, f_star, _ = carry
+    return dict(
+        mappings=jnp.zeros((cfg.num_particles, n, m), jnp.uint8),
+        feasible=jnp.zeros((cfg.num_particles,), bool),
+        fitness=jnp.full((cfg.num_particles,), -jnp.inf, jnp.float32),
+        f_star_trace=jnp.full((cfg.inner_steps,), f_star, jnp.float32))
+
+
+def epoch_found(outs, cfg: PSOConfig) -> jax.Array:
+    """Early-exit predicate: some particle projected to a feasible mapping
+    whose fitness clears the bound."""
+    return jnp.any(outs["feasible"]
+                   & (outs["fitness"] >= cfg.early_exit_fitness))
+
+
+def scan_epochs(run_one, carry0, keys, n, m, cfg: PSOConfig,
+                all_found=None):
+    """Scan ``run_one(carry, k) -> (carry, outs)`` over the epoch keys,
+    optionally gated by ``cfg.early_exit`` (skipped epochs cost one
+    predicated branch and emit shape-matched empty outputs).
+
+    ``run_one`` must drop the ``S_final`` entry from its outputs.
+    ``all_found`` (distributed matcher) fuses the local found-predicate
+    across the mesh so every shard takes the same branch — the predicate
+    must be replicated or the collectives inside ``run_one`` deadlock.
+
+    Returns ``(carry, outs, epochs_run)``.
+    """
+    if not cfg.early_exit:
+        carry, outs = jax.lax.scan(run_one, carry0, keys)
+        return carry, outs, jnp.int32(cfg.epochs)
+
+    def epoch_step(state, k):
+        carry, done_prev, n_run = state
+
+        def live(_):
+            return run_one(carry, k)
+
+        def skip(_):
+            return carry, _skip_epoch_outs(carry, n, m, cfg)
+
+        carry2, outs = jax.lax.cond(done_prev, skip, live, None)
+        found = epoch_found(outs, cfg)
+        if all_found is not None:
+            found = all_found(found)
+        done = done_prev | found
+        n_run = n_run + (~done_prev).astype(jnp.int32)
+        return (carry2, done, n_run), outs
+
+    state0 = (carry0, jnp.bool_(False), jnp.int32(0))
+    (carry, _, epochs_run), outs = jax.lax.scan(epoch_step, state0, keys)
+    return carry, outs, epochs_run
+
+
+def _match_body(key: jax.Array, Q: jax.Array, G: jax.Array, mask: jax.Array,
+                cfg: PSOConfig, carry0):
+    n, m = mask.shape
+    if cfg.prune_mask:
+        mask = ref.prune_mask_fixpoint(mask, Q, G, cfg.prune_iters
+                                       ).astype(mask.dtype)
+    keys = jax.random.split(key, cfg.epochs)
+
+    def run_one(carry, k):
+        carry, outs = run_epoch(carry, k, Q, G, mask, cfg)
+        del outs["S_final"]  # only needed by the distributed consensus
+        return carry, outs
+
+    (S_star, f_star, S_bar), outs, epochs_run = scan_epochs(
+        run_one, carry0, keys, n, m, cfg)
+    outs["S_star"] = S_star
+    outs["f_star"] = f_star
+    outs["S_bar"] = S_bar
+    outs["epochs_run"] = epochs_run
+    return outs
+
+
+# Module-level jitted entry point (cfg is static). The online
+# ``MatcherService`` builds its *own* per-bucket jit wrappers around
+# ``_match_body`` so cached executables have a bounded, evictable lifetime.
+_match_impl = functools.partial(jax.jit, static_argnames=("cfg",))(_match_body)
+
+
 def match(key: jax.Array, Q: jax.Array, G: jax.Array, mask: jax.Array,
-          cfg: PSOConfig):
+          cfg: PSOConfig, carry0=None):
     """Single-device Algorithm 1: T epochs × N particles.
+
+    ``carry0`` optionally warm-starts the global controller state with a
+    previous call's ``(S_star, f_star, S_bar)`` for the same problem
+    (see ``MatchResult.carry`` / the online ``MatcherService``); ``None``
+    is the cold uniform prior.
 
     Returns a dict with per-epoch stacked results:
       mappings  (T, N, n, m) uint8
       feasible  (T, N) bool
       fitness   (T, N) f32
       f_star_trace (T, K) f32   — global-best trajectory (Fig. 2b)
+      S_star/f_star/S_bar       — final controller state (warm-start carry)
+      epochs_run                — epochs actually executed (< T under
+                                  ``cfg.early_exit``)
     """
-    n, m = mask.shape
-    maskf = mask.astype(jnp.float32)
-    mask_rows = maskf.sum(-1, keepdims=True)
-    S_bar0 = maskf / jnp.maximum(mask_rows, 1.0)
-    carry0 = (S_bar0, jnp.float32(-jnp.inf), S_bar0)
-
-    keys = jax.random.split(key, cfg.epochs)
-
-    def epoch_step(carry, k):
-        return run_epoch(carry, k, Q, G, mask, cfg)
-
-    (S_star, f_star, S_bar), outs = jax.lax.scan(epoch_step, carry0, keys)
-    del outs["S_final"]  # only needed by the distributed consensus
-    outs["S_star"] = S_star
-    outs["f_star"] = f_star
-    return outs
+    if carry0 is None:
+        carry0 = default_carry(mask)
+    return _match_impl(key, Q, G, mask, cfg, carry0)
 
 
 def best_feasible(outs) -> Optional[jnp.ndarray]:

@@ -1,0 +1,250 @@
+"""Online matcher service: warm-started, compile-cached subgraph matching.
+
+``pso.match`` alone is a batch API: every new (n, m) query/target shape
+triggers an XLA recompile (seconds) and every call restarts the swarm from
+the cold uniform prior — the opposite of what an *online* scheduler needs
+when tasks arrive unpredictably at microsecond granularity. The
+``MatcherService`` turns it into a service:
+
+  * **Shape classes** — query/target problems are bucketed to padded
+    ``(n_pad, m_pad)`` classes via ``preemptible_dag.pad_problem`` (dummy
+    tiles pinned to dummy PEs, semantics preserved), so repeat arrivals of
+    any size within a bucket reuse one compiled executable.
+  * **Bounded compile LRU** — one jit wrapper per (bucket, config), held in
+    an LRU of ``cache_capacity`` entries; evicting an entry drops its
+    executable. Repeat arrivals never recompile.
+  * **Warm starts** — the final global-controller state
+    ``(S*, f*, S̄)`` of each call is remembered under a
+    (workload, platform-state) key and fed back as ``carry0`` on the next
+    arrival of the same problem, so the swarm resumes from the previous
+    consensus instead of the uniform prior.
+  * **Early exit** — the service enables ``cfg.early_exit`` so easy
+    matches stop scanning epochs once a feasible mapping clears the
+    fitness bound (1 epoch instead of T on planted instances).
+
+Statistics for all three mechanisms are exported via ``stats`` /
+``stats_dict()`` and surfaced by ``sched.metrics``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from collections import OrderedDict
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pso
+from repro.core.graphs import (Graph, compatibility_mask,
+                               topological_relabel)
+from repro.core.matcher import (MatchResult, build_distributed_match,
+                                collect_result)
+from repro.core.preemptible_dag import pad_problem
+
+
+def _round_up(v: int, mult: int) -> int:
+    mult = max(mult, 1)
+    return ((v + mult - 1) // mult) * mult
+
+
+def shape_bucket(n: int, m: int, n_multiple: int = 8,
+                 m_multiple: int = 16) -> Tuple[int, int]:
+    """Stable padded shape class for an (n, m) matching problem.
+
+    The target bucket must leave room for the ``n_pad - n`` dummy PEs that
+    ``pad_problem`` pins the dummy query tiles to.
+    """
+    n_pad = _round_up(max(n, 1), n_multiple)
+    m_pad = _round_up(max(m, 1) + (n_pad - n), m_multiple)
+    return n_pad, m_pad
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    calls: int = 0
+    compile_cache_hits: int = 0      # bucket already had an executable
+    compile_cache_misses: int = 0    # new bucket → jit compile
+    compile_evictions: int = 0
+    warm_hits: int = 0               # carry0 reused from a previous call
+    warm_misses: int = 0
+    warm_evictions: int = 0
+    epochs_run: int = 0              # total epochs actually executed
+    epochs_budgeted: int = 0         # cfg.epochs × calls
+    found: int = 0
+
+    @property
+    def epochs_saved(self) -> int:
+        return self.epochs_budgeted - self.epochs_run
+
+    @property
+    def compile_hit_rate(self) -> float:
+        return self.compile_cache_hits / max(self.calls, 1)
+
+    @property
+    def warm_hit_rate(self) -> float:
+        return self.warm_hits / max(self.calls, 1)
+
+
+@dataclasses.dataclass
+class ServiceMatchResult(MatchResult):
+    bucket: Tuple[int, int] = (0, 0)
+    compile_cache_hit: bool = False
+    warm_hit: bool = False
+    latency_s: float = 0.0
+
+
+class MatcherService:
+    """Warm-start online wrapper around Algorithm 1.
+
+    Single-device by default; pass ``mesh`` + ``axis_names`` to run each
+    bucket's executable as the collective-fused distributed matcher.
+    """
+
+    def __init__(self, cfg: Optional[pso.PSOConfig] = None, *,
+                 mesh=None, axis_names: Sequence[str] = ("data",),
+                 cache_capacity: int = 16, warm_capacity: int = 256,
+                 warm_start: bool = True, early_exit: bool = True,
+                 n_multiple: int = 8, m_multiple: int = 16):
+        cfg = cfg or pso.PSOConfig()
+        if early_exit and not cfg.early_exit:
+            cfg = cfg.replace(early_exit=True)
+        self.cfg = cfg
+        self.mesh = mesh
+        self.axis_names = tuple(axis_names)
+        self.cache_capacity = max(int(cache_capacity), 1)
+        self.warm_capacity = max(int(warm_capacity), 1)
+        self.warm_start = warm_start
+        self.n_multiple = n_multiple
+        self.m_multiple = m_multiple
+        self.stats = ServiceStats()
+        self._compiled: "OrderedDict[Tuple[int, int], object]" = OrderedDict()
+        self._warm: "OrderedDict[Tuple, tuple]" = OrderedDict()
+
+    # -- caches ------------------------------------------------------------
+
+    def _executable(self, bucket: Tuple[int, int]):
+        fn = self._compiled.get(bucket)
+        if fn is not None:
+            self._compiled.move_to_end(bucket)
+            self.stats.compile_cache_hits += 1
+            return fn
+        self.stats.compile_cache_misses += 1
+        if self.mesh is None:
+            cfg = self.cfg
+
+            def fn(key, Q, G, mask, carry0, _cfg=cfg):
+                return pso._match_body(key, Q, G, mask, _cfg, carry0)
+
+            fn = jax.jit(fn)
+        else:
+            fn = build_distributed_match(bucket, self.mesh, self.cfg,
+                                         self.axis_names)
+        self._compiled[bucket] = fn
+        while len(self._compiled) > self.cache_capacity:
+            self._compiled.popitem(last=False)
+            self.stats.compile_evictions += 1
+        return fn
+
+    def _warm_key(self, workload_key, Qp, Gp, maskp) -> Tuple:
+        """Warm starts are only valid for the *same* problem (f* values are
+        not comparable across different Q/G), so the key always includes a
+        content digest; ``workload_key`` additionally scopes entries to the
+        caller's (workload, platform-state) naming."""
+        h = hashlib.sha1()
+        h.update(np.ascontiguousarray(Qp).tobytes())
+        h.update(np.ascontiguousarray(Gp).tobytes())
+        h.update(np.ascontiguousarray(maskp).tobytes())
+        return (workload_key, Qp.shape[0], Gp.shape[0], h.hexdigest())
+
+    def _get_carry(self, warm_key):
+        if self.warm_start and warm_key in self._warm:
+            self._warm.move_to_end(warm_key)
+            self.stats.warm_hits += 1
+            return self._warm[warm_key], True
+        self.stats.warm_misses += 1
+        return None, False
+
+    def _put_carry(self, warm_key, carry):
+        if not self.warm_start:
+            return
+        self._warm[warm_key] = carry
+        while len(self._warm) > self.warm_capacity:
+            self._warm.popitem(last=False)
+            self.stats.warm_evictions += 1
+
+    # -- matching ----------------------------------------------------------
+
+    def match(self, query: Graph, target: Graph,
+              key: Optional[jax.Array] = None,
+              workload_key=None) -> ServiceMatchResult:
+        """Match ``query`` onto ``target`` through the service caches.
+
+        ``workload_key`` names the (workload, platform-state) class for
+        warm-start scoping — e.g. ``(task_name, free_engine_signature)``.
+        Results are exactly the unpadded equivalent of a direct
+        ``pso.match`` on the same problem.
+        """
+        t0 = time.perf_counter()
+        self.stats.calls += 1
+        if key is None:
+            key = jax.random.PRNGKey(0)
+
+        q, order = topological_relabel(query)
+        n, m = q.n, target.n
+        # stay on the host until the padded problem is final — the jit call
+        # uploads Qp/Gp/maskp once; no device→host→device round trip
+        mask = compatibility_mask(q, target)
+        bucket = shape_bucket(n, m, self.n_multiple, self.m_multiple)
+        Qp, Gp, maskp = pad_problem(q.adj, target.adj, mask, *bucket)
+
+        hits_before = self.stats.compile_cache_hits
+        fn = self._executable(bucket)
+        compile_hit = self.stats.compile_cache_hits > hits_before
+
+        warm_key = self._warm_key(workload_key, Qp, Gp, maskp)
+        carry0, warm_hit = self._get_carry(warm_key)
+        if carry0 is None:
+            carry0 = pso.default_carry(jnp.asarray(maskp))
+
+        if self.mesh is None:
+            outs = fn(key, Qp, Gp, maskp, carry0)
+        else:
+            num_shards = int(np.prod([self.mesh.shape[a]
+                                      for a in self.axis_names]))
+            keys = jax.random.split(key, num_shards)
+            outs = fn(keys, Qp, Gp, maskp, carry0)
+
+        base = collect_result(outs, order=order, crop=(n, m))
+        res = ServiceMatchResult(**{f.name: getattr(base, f.name)
+                                    for f in dataclasses.fields(MatchResult)})
+        self._put_carry(warm_key, res.carry)
+        self.stats.epochs_run += res.epochs_run
+        self.stats.epochs_budgeted += self.cfg.epochs
+        if res.found:
+            self.stats.found += 1
+        res.bucket = bucket
+        res.compile_cache_hit = compile_hit
+        res.warm_hit = warm_hit
+        res.latency_s = time.perf_counter() - t0
+        return res
+
+    # -- reporting ---------------------------------------------------------
+
+    def stats_dict(self) -> Dict[str, float]:
+        s = self.stats
+        return {
+            "calls": s.calls,
+            "compile_cache_hits": s.compile_cache_hits,
+            "compile_cache_misses": s.compile_cache_misses,
+            "compile_hit_rate": s.compile_hit_rate,
+            "warm_hits": s.warm_hits,
+            "warm_misses": s.warm_misses,
+            "warm_hit_rate": s.warm_hit_rate,
+            "epochs_run": s.epochs_run,
+            "epochs_budgeted": s.epochs_budgeted,
+            "epochs_saved": s.epochs_saved,
+            "found": s.found,
+        }

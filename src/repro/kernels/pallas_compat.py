@@ -1,0 +1,14 @@
+"""Version-compat shims for Pallas TPU symbols.
+
+The TPU compiler-params dataclass was renamed across JAX releases
+(``TPUCompilerParams`` on 0.4.x, ``CompilerParams`` later). Kernel modules
+import ``CompilerParams`` from here instead of reaching into
+``jax.experimental.pallas.tpu`` directly.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None)
+if CompilerParams is None:
+    CompilerParams = pltpu.TPUCompilerParams

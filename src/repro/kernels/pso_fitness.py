@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 TILE_N = 128
 
 
@@ -112,7 +114,7 @@ def edge_fitness_pallas(S: jax.Array, Q: jax.Array, G: jax.Array,
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=jax.ShapeDtypeStruct((B, 1), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(S, S, Q, G)
@@ -133,7 +135,7 @@ def edge_fitness_quantized_pallas(S_q: jax.Array, Q: jax.Array, G: jax.Array,
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=jax.ShapeDtypeStruct((B, 1), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(S_q, S_q, Q, G)

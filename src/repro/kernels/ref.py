@@ -81,26 +81,63 @@ def ullmann_refine_step(M: jax.Array, Q: jax.Array, G: jax.Array) -> jax.Array:
     return (M.astype(jnp.int32) * (viol == 0)).astype(M.dtype)
 
 
-def ullmann_refine_fixpoint(M: jax.Array, Q: jax.Array, G: jax.Array,
-                            max_iters: int = 0) -> jax.Array:
-    """Iterate the sweep to fixpoint (bounded by n·m sweeps, far fewer in
-    practice; ``max_iters=0`` means until convergence with a while_loop)."""
+def _fixpoint(step, M: jax.Array, max_iters: int = 0) -> jax.Array:
+    """Iterate ``step`` to a fixpoint (``max_iters=0``: while_loop until
+    nothing changes — each productive iteration removes ≥ 1 candidate, so
+    termination is bounded by the candidate count; > 0: fixed fori_loop)."""
     if max_iters and max_iters > 0:
-        def body(_, m):
-            return ullmann_refine_step(m, Q, G)
-        return jax.lax.fori_loop(0, max_iters, body, M)
+        return jax.lax.fori_loop(0, max_iters, lambda _, m: step(m), M)
 
     def cond(state):
-        m, changed = state
+        _, changed = state
         return changed
 
     def body(state):
         m, _ = state
-        m2 = ullmann_refine_step(m, Q, G)
+        m2 = step(m)
         return m2, jnp.any(m2 != m)
 
     out, _ = jax.lax.while_loop(cond, body, (M, jnp.bool_(True)))
     return out
+
+
+def ullmann_refine_fixpoint(M: jax.Array, Q: jax.Array, G: jax.Array,
+                            max_iters: int = 0) -> jax.Array:
+    """Iterate the sweep to fixpoint (bounded by n·m sweeps, far fewer in
+    practice; ``max_iters=0`` means until convergence with a while_loop)."""
+    return _fixpoint(lambda m: ullmann_refine_step(m, Q, G), M, max_iters)
+
+
+def injectivity_prune(M: jax.Array) -> jax.Array:
+    """All-different propagation on a candidate matrix.
+
+    If a query row has exactly one surviving candidate column, no other row
+    may use that column (mappings are injective). One application of the
+    rule; iterate together with ``ullmann_refine_step`` to a fixpoint.
+    Expressed as row/column reductions + elementwise ops only, so it lowers
+    onto the same comparator/MAC datapath as the refinement sweep.
+    """
+    Mi = M.astype(jnp.int32)
+    singleton_rows = (Mi.sum(axis=1, keepdims=True) == 1).astype(jnp.int32)
+    claimed = (singleton_rows * Mi).sum(axis=0, keepdims=True)   # (1, m)
+    keep = 1 - (claimed > 0).astype(jnp.int32) * (1 - singleton_rows * Mi)
+    return (Mi * jnp.clip(keep, 0, 1)).astype(M.dtype)
+
+
+def prune_mask_fixpoint(mask: jax.Array, Q: jax.Array, G: jax.Array,
+                        max_iters: int = 0) -> jax.Array:
+    """Shrink the global compatibility mask before any swarm runs.
+
+    Alternates one Ullmann refinement sweep (1-hop arc consistency) with
+    one injectivity-propagation step until nothing changes. This is the
+    Ullmann half of the algorithm applied *globally* — on planted
+    instances it often collapses most rows to singletons, turning the PSO
+    into a local repair of the few remaining free rows. Empty rows simply
+    make every particle infeasible, which is the correct answer.
+    """
+    return _fixpoint(
+        lambda m: injectivity_prune(ullmann_refine_step(m, Q, G)),
+        mask, max_iters)
 
 
 def is_feasible(M: jax.Array, Q: jax.Array, G: jax.Array) -> jax.Array:

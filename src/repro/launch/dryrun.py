@@ -262,7 +262,10 @@ def lower_matcher(mesh):
     Q = jax.ShapeDtypeStruct((n, n), jnp.uint8)
     G = jax.ShapeDtypeStruct((m, m), jnp.uint8)
     mask = jax.ShapeDtypeStruct((n, m), jnp.uint8)
-    return fn.lower(keys, Q, G, mask)
+    carry0 = (jax.ShapeDtypeStruct((n, m), jnp.float32),   # S*
+              jax.ShapeDtypeStruct((), jnp.float32),       # f*
+              jax.ShapeDtypeStruct((n, m), jnp.float32))   # S̄
+    return fn.lower(keys, Q, G, mask, carry0)
 
 
 def run_probe(arch: str, shape: ShapeConfig, mesh, mesh_name: str,

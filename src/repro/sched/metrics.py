@@ -39,6 +39,15 @@ def energy_efficiency(results: Dict[str, SimResult],
             for name, r in results.items() if name != ours}
 
 
+def matcher_service_stats(results: Dict[str, SimResult]
+                          ) -> Dict[str, Dict[str, float]]:
+    """Online matcher-service counters per scheduler: compile-cache and
+    warm-start hit rates, and epochs saved by early exit. Schedulers that
+    don't run a matcher service report an empty dict."""
+    return {name: dict(r.matcher_stats) for name, r in results.items()
+            if r.matcher_stats}
+
+
 def latency_bound_throughput(scheduler_name: str, platform: Platform,
                              complexity: str, *,
                              hit_target: float = 0.95,

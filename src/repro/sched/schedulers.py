@@ -34,8 +34,8 @@ import numpy as np
 
 from repro.core import interrupts, preemptible_dag, ullmann
 from repro.core.graphs import compatibility_mask
-from repro.core.matcher import IMMSchedMatcher
-from repro.accel.target_graph import free_engine_graph
+from repro.core.service import MatcherService
+from repro.accel.target_graph import free_engine_graph, free_engine_signature
 
 _EPS = 1e-15
 
@@ -53,6 +53,10 @@ class SchedulerBase:
         self.cpu_free_at = 0.0
         self._pdag_cache: Dict = {}
         self._reserved: Dict[int, List[int]] = {}   # task_id -> engines
+
+    def matcher_stats(self) -> Dict[str, float]:
+        """Online matcher-service counters; {} for schedulers without one."""
+        return {}
 
     # -- engine bookkeeping ------------------------------------------------
 
@@ -133,6 +137,17 @@ class IMMSchedScheduler(SchedulerBase):
 
     def __init__(self, quantized: bool = True):
         self.quantized = quantized
+        self._service: Optional[MatcherService] = None
+
+    def reset(self, sim):
+        super().reset(sim)
+        # online matcher service: compiled-shape cache + warm starts keyed
+        # by (workload, free-engine set), early-exit epochs
+        cfg = sim.cfg.pso_cfg.replace(quantized=self.quantized)
+        self._service = MatcherService(cfg)
+
+    def matcher_stats(self) -> Dict[str, float]:
+        return self._service.stats_dict() if self._service else {}
 
     def on_event(self, sim, now, tasks, trigger, arrived=None):
         if trigger == "activate":
@@ -190,8 +205,8 @@ class IMMSchedScheduler(SchedulerBase):
 
     def _real_match(self, sim, urgent, freed) -> Optional[List[int]]:
         pd = self._pdag(sim, urgent)
-        tgt = free_engine_graph(sim.platform, [
-            e in set(freed) for e in range(sim.platform.engines)])
+        free = [e in set(freed) for e in range(sim.platform.engines)]
+        tgt = free_engine_graph(sim.platform, free)
         if pd.n == 0 or tgt.n < 4:
             return None
         q = pd.graph
@@ -199,8 +214,9 @@ class IMMSchedScheduler(SchedulerBase):
             keep = np.sort(np.argsort([t.stage for t in pd.tiles])[:tgt.n])
             q = type(q)(adj=q.adj[np.ix_(keep, keep)], types=q.types[keep],
                         weights=q.weights[keep])
-        cfg = sim.cfg.pso_cfg.replace(quantized=self.quantized)
-        res = IMMSchedMatcher(cfg).match(q, tgt)
+        res = self._service.match(
+            q, tgt,
+            workload_key=(urgent.spec.name, free_engine_signature(free)))
         if not res.found:
             return None
         engine_ids = tgt.weights.astype(int)

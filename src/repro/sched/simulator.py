@@ -93,6 +93,9 @@ class SimResult:
     exec_energy: float
     idle_energy: float
     sim_horizon: float
+    # online matcher-service counters (compile-cache / warm-start hits,
+    # epochs saved by early exit); empty for schedulers without a service
+    matcher_stats: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def urgent_hit_rate(self) -> float:
@@ -218,7 +221,8 @@ class Simulator:
             avg_sched_time=float(np.mean(st)) if st else 0.0,
             total_energy=total_energy, sched_energy=sched_energy,
             exec_energy=exec_energy, idle_energy=max(idle_energy, 0.0),
-            sim_horizon=now)
+            sim_horizon=now,
+            matcher_stats=sched.matcher_stats())
 
     # ------------------------------------------------------------------
     def _admit(self, spec: TaskSpec) -> TaskState:

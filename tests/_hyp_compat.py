@@ -1,0 +1,66 @@
+"""Hypothesis compatibility shim for environments without `hypothesis`.
+
+Exports ``given``, ``settings`` and ``st`` — the real thing when the
+package is installed (see requirements-dev.txt), otherwise a minimal
+deterministic fallback covering the subset these tests use:
+
+  * ``st.integers(lo, hi)``  — uniform integer draws
+  * ``st.randoms()``         — a seeded ``random.Random`` instance
+  * ``@settings(max_examples=N, deadline=...)`` — example-count control
+  * ``@given(*strategies)``  — runs the test once per seeded example
+
+The fallback is exhaustive-deterministic (fixed seed per example index),
+so failures reproduce without hypothesis's shrinking machinery. Import as
+
+    from _hyp_compat import given, settings, st
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+    import random
+
+    _BASE_SEED = 0x1A55C0DE
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw_fn = draw_fn
+
+        def draw(self, rnd):
+            return self._draw_fn(rnd)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+        @staticmethod
+        def randoms(**_kw):
+            return _Strategy(
+                lambda rnd: random.Random(rnd.randint(0, 2**31 - 1)))
+
+    st = _Strategies()
+
+    def settings(max_examples=10, deadline=None, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            # NOTE: no functools.wraps — the wrapper must expose a
+            # zero-argument signature or pytest mistakes the strategy
+            # parameters for fixtures.
+            def wrapper():
+                n = getattr(wrapper, "_max_examples", 10)
+                for example in range(n):
+                    rnd = random.Random(_BASE_SEED + 7919 * example)
+                    drawn = [s.draw(rnd) for s in strategies]
+                    fn(*drawn)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco

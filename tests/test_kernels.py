@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 from repro.kernels import ops, ref
 
@@ -97,6 +97,7 @@ def test_masked_argmax_matches_ref(n, m):
 
 # ------------------------- property tests (oracles) ------------------------
 
+@pytest.mark.slow
 @settings(max_examples=25, deadline=None)
 @given(st.integers(2, 12), st.integers(2, 20), st.randoms())
 def test_pso_update_invariants(n, m, rnd):
@@ -115,6 +116,7 @@ def test_pso_update_invariants(n, m, rnd):
     np.testing.assert_allclose(s_new.sum(-1), 1.0, atol=1e-4)
 
 
+@pytest.mark.slow
 @settings(max_examples=25, deadline=None)
 @given(st.integers(2, 10), st.integers(2, 14), st.randoms())
 def test_refine_never_adds_candidates(n, m, rnd):

@@ -28,6 +28,7 @@ def _check_mapping(mapping, q, g):
     assert (covered >= q.adj).all()
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("seed,n,m", [(0, 6, 12), (1, 8, 16), (2, 10, 24)])
 def test_matcher_finds_planted_match(seed, n, m):
     q, g = _planted(seed, n, m)
@@ -39,6 +40,7 @@ def test_matcher_finds_planted_match(seed, n, m):
     _check_mapping(res.mapping, q, g)
 
 
+@pytest.mark.slow
 def test_matcher_quantized_mode_finds_match():
     q, g = _planted(3, 8, 16)
     cfg = pso.PSOConfig(num_particles=48, epochs=4, inner_steps=10,

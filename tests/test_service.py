@@ -1,0 +1,143 @@
+"""Online MatcherService: compiled-shape cache accounting, warm starts,
+early exit, and parity with the direct matcher."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import graphs, pso
+from repro.core.matcher import IMMSchedMatcher
+from repro.core.service import MatcherService, shape_bucket
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = pso.PSOConfig(num_particles=24, epochs=3, inner_steps=8)
+
+
+def _planted(seed, n, m, edge_prob=0.35):
+    key = jax.random.PRNGKey(seed)
+    kq, kt = jax.random.split(key)
+    q = graphs.random_dag(kq, n, edge_prob)
+    g = graphs.embed_query_in_target(kt, q, m)
+    return q, g
+
+
+def _check_mapping(mapping, q, g):
+    assert mapping is not None
+    M = np.asarray(mapping, dtype=np.int64)
+    assert (M.sum(axis=1) == 1).all()
+    assert (M.sum(axis=0) <= 1).all()
+    covered = M @ g.adj.astype(np.int64) @ M.T
+    assert (covered >= q.adj).all()
+
+
+def test_shape_bucket_stable_and_padded():
+    assert shape_bucket(8, 16) == (8, 16)
+    assert shape_bucket(9, 16) == (16, 32)     # room for 7 dummy PEs
+    assert shape_bucket(10, 24) == shape_bucket(12, 26)
+    n_pad, m_pad = shape_bucket(5, 9)
+    assert n_pad >= 5 and m_pad >= 9 + (n_pad - 5)
+
+
+def test_cache_hit_miss_accounting_across_buckets():
+    svc = MatcherService(CFG)
+    qa, ga = _planted(0, 6, 12)     # bucket A
+    qb, gb = _planted(1, 8, 16)     # bucket A? (8,16) vs (8,16): (6,12)->(8,16)
+    qc, gc = _planted(2, 10, 24)    # bucket B (16, 32)
+
+    r1 = svc.match(qa, ga, key=jax.random.PRNGKey(0))
+    assert not r1.compile_cache_hit and not r1.warm_hit
+    r2 = svc.match(qb, gb, key=jax.random.PRNGKey(1))
+    assert r2.bucket == r1.bucket           # same shape class
+    assert r2.compile_cache_hit             # no recompile for repeat bucket
+    assert not r2.warm_hit                  # different problem content
+    r3 = svc.match(qc, gc, key=jax.random.PRNGKey(2))
+    assert r3.bucket != r1.bucket
+    assert not r3.compile_cache_hit         # new bucket compiles
+
+    s = svc.stats_dict()
+    assert s["calls"] == 3
+    assert s["compile_cache_misses"] == 2
+    assert s["compile_cache_hits"] == 1
+    assert s["warm_hits"] == 0 and s["warm_misses"] == 3
+
+    # repeat of the first problem: compile hit AND warm hit
+    r4 = svc.match(qa, ga, key=jax.random.PRNGKey(3))
+    assert r4.compile_cache_hit and r4.warm_hit
+    assert svc.stats_dict()["warm_hits"] == 1
+
+
+def test_compile_cache_is_bounded_lru():
+    svc = MatcherService(CFG, cache_capacity=1)
+    qa, ga = _planted(0, 6, 12)
+    qc, gc = _planted(2, 10, 24)
+    svc.match(qa, ga)
+    svc.match(qc, gc)                       # evicts bucket A
+    assert svc.stats_dict()["compile_cache_misses"] == 2
+    assert len(svc._compiled) == 1
+    svc.match(qa, ga)                       # must recompile bucket A
+    assert svc.stats_dict()["compile_cache_misses"] == 3
+
+
+def test_warm_start_no_worse_than_cold_at_equal_budget():
+    """Same problem, same epoch budget: the warm-started call must reach at
+    least the cold call's best fitness (the carry holds S*/f*), and with
+    early exit must not need more epochs."""
+    q, g = _planted(2, 10, 24)
+    svc = MatcherService(CFG)
+    cold = svc.match(q, g, key=jax.random.PRNGKey(0), workload_key="wl")
+    warm = svc.match(q, g, key=jax.random.PRNGKey(1), workload_key="wl")
+    assert warm.warm_hit
+    assert warm.f_star >= cold.f_star - 1e-6
+    assert warm.epochs_run <= cold.epochs_run
+    if cold.found:
+        assert warm.found
+        _check_mapping(warm.mapping, q, g)
+
+
+def test_early_exit_same_mapping_as_full_budget():
+    """On a unique-solution planted instance, the early-exited service call
+    and the full-budget direct matcher must return the same mapping."""
+    q, g = _planted(3, 8, 16)
+    svc = MatcherService(CFG, early_exit=True)
+    res_fast = svc.match(q, g, key=jax.random.PRNGKey(3))
+    res_full = IMMSchedMatcher(CFG).match(q, g, key=jax.random.PRNGKey(3))
+    assert res_fast.found and res_full.found
+    _check_mapping(res_fast.mapping, q, g)
+    assert res_fast.epochs_run <= res_full.epochs_run
+    np.testing.assert_array_equal(np.asarray(res_fast.mapping),
+                                  np.asarray(res_full.mapping))
+
+
+def test_service_parity_with_direct_matcher():
+    """With early exit off and a bucket-exact problem (no padding), the
+    service is bit-identical to the direct matcher path."""
+    q, g = _planted(1, 8, 16)       # (8, 16) == its own bucket
+    assert shape_bucket(8, 16) == (8, 16)
+    svc = MatcherService(CFG, early_exit=False, warm_start=False)
+    res_s = svc.match(q, g, key=jax.random.PRNGKey(7))
+    res_d = IMMSchedMatcher(CFG).match(q, g, key=jax.random.PRNGKey(7))
+    assert res_s.found == res_d.found
+    assert res_s.feasible_count == res_d.feasible_count
+    np.testing.assert_allclose(res_s.f_star, res_d.f_star, rtol=1e-6)
+    np.testing.assert_array_equal(res_s.all_feasible, res_d.all_feasible)
+    if res_d.found:
+        np.testing.assert_array_equal(np.asarray(res_s.mapping),
+                                      np.asarray(res_d.mapping))
+
+
+def test_early_exit_pays_fewer_epochs():
+    q, g = _planted(0, 6, 12)
+    svc = MatcherService(CFG)       # early exit on by default
+    res = svc.match(q, g, key=jax.random.PRNGKey(0))
+    assert res.found
+    assert res.epochs_run < CFG.epochs
+    assert svc.stats_dict()["epochs_saved"] > 0
+
+
+def test_infeasible_problem_reports_not_found():
+    q = graphs.line_graph(6)
+    g = graphs.line_graph(4)
+    svc = MatcherService(CFG)
+    res = svc.match(q, g)
+    assert not res.found
+    assert res.epochs_run == CFG.epochs     # never exits early

@@ -77,6 +77,7 @@ def test_divisibility_fallback():
     assert "FALLBACK-OK" in _run(script)
 
 
+@pytest.mark.slow
 def test_sharded_train_step_matches_single_device():
     """The FSDP+TP train step must be numerically identical to the
     unsharded one."""
@@ -125,6 +126,7 @@ def test_sharded_train_step_matches_single_device():
     assert "SHARDED-TRAIN-OK" in _run(script)
 
 
+@pytest.mark.slow
 def test_grad_compression_semantics():
     """int8 error-feedback psum ≈ exact mean, and error feedback keeps the
     cumulative bias bounded over steps."""
@@ -135,11 +137,13 @@ def test_grad_compression_semantics():
     from functools import partial
     from jax.sharding import PartitionSpec as P
     from repro.optim.grad_compress import compressed_psum
+    from repro.runtime.sharding import get_shard_map
 
     mesh = jax.make_mesh((8,), ("data",))
     D = 8
+    shard_map = get_shard_map()
 
-    @partial(jax.shard_map, mesh=mesh, in_specs=(P("data"), P("data")),
+    @partial(shard_map, mesh=mesh, in_specs=(P("data"), P("data")),
              out_specs=(P("data"), P("data")))
     def one_round(g, err):
         mean, new_err = compressed_psum(g[0], err[0], "data", D)

@@ -1,7 +1,7 @@
 """Workload zoo + preemptible DAG property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 from repro.accel import EDGE
 from repro.configs import ARCHS, get_config
