@@ -219,6 +219,47 @@ def quant_ablation() -> List[tuple]:
 
 
 # ---------------------------------------------------------------------------
+# Batched vs sequential burst latency (coalesced matcher service)
+# ---------------------------------------------------------------------------
+
+def fig_batch() -> List[tuple]:
+    """Burst-serving figure: coalesced-batch vs sequential warm latency
+    from ``BENCH_batch.json``, plotted alongside the warm/cold service
+    numbers from ``BENCH_service.json`` (run ``benchmarks.bench_batch`` /
+    ``benchmarks.bench_service`` first to refresh the artifacts)."""
+    import json
+    import os
+    rows: List[tuple] = []
+    if os.path.exists("BENCH_batch.json"):
+        with open("BENCH_batch.json") as f:
+            d = json.load(f)
+        k = d["batch_size"]
+        rows += [
+            (f"batch/seq_{k}_warm_us", d["sequential_total_median_s"] * 1e6,
+             f"{sum(d['per_problem_found'])}/{k}_found"),
+            (f"batch/coalesced_{k}_warm_us",
+             d["coalesced_batch_median_s"] * 1e6,
+             round(d["batch_over_sequential_ratio"], 3)),
+            ("batch/speedup", 0.0, round(d["coalesced_speedup"], 2)),
+            ("batch/occupancy", 0.0, round(d["batch_occupancy"], 3)),
+            ("batch/fastpath_hits", 0.0, d["carry_fastpath_hits"]),
+        ]
+    else:
+        rows.append(("batch/missing", 0.0,
+                     "run_python_-m_benchmarks.bench_batch"))
+    if os.path.exists("BENCH_service.json"):
+        with open("BENCH_service.json") as f:
+            s = json.load(f)
+        rows += [
+            ("batch/service_cold_us", s["cold_first_call_s"] * 1e6,
+             "cold_compile+swarm"),
+            ("batch/service_warm_us", s["warm_repeat_median_s"] * 1e6,
+             round(s["cold_vs_warm_speedup"], 1)),
+        ]
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # Matcher scaling microbenchmark (particles → engines)
 # ---------------------------------------------------------------------------
 

@@ -15,7 +15,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: fig2a,fig2b,fig6,fig7,fig8,quant,"
-                         "matcher")
+                         "matcher,batch")
     args = ap.parse_args()
 
     from benchmarks import figures
@@ -28,6 +28,7 @@ def main() -> None:
         "fig8": figures.fig8_energy,
         "quant": figures.quant_ablation,
         "matcher": figures.matcher_scaling,
+        "batch": figures.fig_batch,
     }
     selected = (args.only.split(",") if args.only else list(benches))
 

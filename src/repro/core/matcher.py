@@ -41,6 +41,8 @@ class MatchResult:
     all_fitness: np.ndarray              # (T*N,)
     carry: Optional[tuple] = None        # (S_star, f_star, S_bar) warm-start
     epochs_run: int = 0                  # epochs executed (< T on early exit)
+    carry_verified: bool = False         # warm carry re-validated by one
+                                         # projection (0-epoch fast path)
 
     @property
     def found(self) -> bool:
@@ -69,6 +71,20 @@ def collect_result(outs, order=None, crop=None) -> MatchResult:
     if feas.any():
         idx = np.where(feas)[0]
         best = maps[idx[np.argmax(fit[idx])]]
+    carry_ok = bool(np.asarray(
+        outs.get("carry_feasible", False)).reshape(-1)[-1])
+    if best is None and carry_ok:
+        # warm-carry fast path: every epoch was skipped, the re-validated
+        # projection of the carried S* IS the mapping
+        M_c = np.asarray(outs["carry_mapping"])
+        M_c = M_c.reshape(-1, M_c.shape[-2], M_c.shape[-1])[-1]
+        if crop is not None:
+            M_c = M_c[:crop[0], :crop[1]]
+        if order is not None:
+            unperm = np.empty_like(M_c)
+            unperm[order, :] = M_c
+            M_c = unperm
+        best = M_c
     return MatchResult(
         mapping=best,
         feasible_count=int(feas.sum()),
@@ -76,7 +92,36 @@ def collect_result(outs, order=None, crop=None) -> MatchResult:
         f_star_trace=np.asarray(outs["f_star_trace"]),
         all_mappings=maps, all_feasible=feas, all_fitness=fit,
         carry=(outs["S_star"], outs["f_star"], outs["S_bar"]),
-        epochs_run=int(np.asarray(outs["epochs_run"]).reshape(-1)[-1]))
+        epochs_run=int(np.asarray(outs["epochs_run"]).reshape(-1)[-1]),
+        carry_verified=carry_ok)
+
+
+def split_batch_outs(outs, batch: int):
+    """Split a ``match_batch`` output pytree into per-problem pytrees.
+
+    The batch axis sits *after* the epoch axis on per-epoch leaves
+    (mappings/feasible/fitness/f_star_trace are (T, B, ...)) and leads on
+    the controller leaves (S_star/f_star/S_bar/epochs_run are (B, ...)).
+    Each returned slice is exactly the pytree a single ``match`` call
+    would produce, so it feeds straight into ``collect_result``.
+    """
+    per_epoch = {"mappings", "feasible", "fitness", "f_star_trace"}
+    host = {k: np.asarray(v) for k, v in outs.items()}  # one copy per leaf
+    return [{k: (v[:, b] if k in per_epoch else v[b])
+             for k, v in host.items()}
+            for b in range(batch)]
+
+
+def collect_batch_results(outs, batch: int, orders=None, crops=None):
+    """Host-side gather of batched match outputs into per-problem
+    ``MatchResult``s (``orders``/``crops``: per-problem, or None)."""
+    results = []
+    for b, slice_b in enumerate(split_batch_outs(outs, batch)):
+        results.append(collect_result(
+            slice_b,
+            order=None if orders is None else orders[b],
+            crop=None if crops is None else crops[b]))
+    return results
 
 
 def _fuse_global_best(S_star, f_star, axis_names):
@@ -129,6 +174,14 @@ def build_distributed_match(Q_shape: Tuple[int, int], mesh: Mesh,
                                            ).astype(mask.dtype)
         keys = jax.random.split(key[0], cfg.epochs)  # this shard's key
 
+        if cfg.early_exit and cfg.carry_fastpath:
+            # carry0/Q/G/mask are replicated, so every shard computes the
+            # same verdict — the early-exit branch stays collective-safe
+            M_c, carry_ok = pso.carry_fast_path(carry0, Q, G, mask, cfg)
+        else:
+            M_c = jnp.zeros((n, m), jnp.uint8)
+            carry_ok = jnp.bool_(False)
+
         def run_one(carry, k):
             carry, outs = pso.run_epoch(carry, k, Q, G, mask, cfg)
             S_star, f_star, _ = carry
@@ -147,11 +200,14 @@ def build_distributed_match(Q_shape: Tuple[int, int], mesh: Mesh,
             return jax.lax.pmax(found.astype(jnp.int32), axis_names) > 0
 
         (S_star, f_star, S_bar), outs, epochs_run = pso.scan_epochs(
-            run_one, carry0, keys, n, m, cfg, all_found=all_found)
+            run_one, carry0, keys, n, m, cfg, all_found=all_found,
+            done0=carry_ok)
         outs["S_star"] = S_star
         outs["f_star"] = f_star
         outs["S_bar"] = S_bar
         outs["epochs_run"] = epochs_run
+        outs["carry_mapping"] = M_c
+        outs["carry_feasible"] = carry_ok
         return outs
 
     shard_axes = P(axis_names)
@@ -159,11 +215,70 @@ def build_distributed_match(Q_shape: Tuple[int, int], mesh: Mesh,
     out_specs = dict(
         mappings=P(None, axis_names), feasible=P(None, axis_names),
         fitness=P(None, axis_names), f_star_trace=P(),
-        S_star=P(), f_star=P(), S_bar=P(), epochs_run=P())
+        S_star=P(), f_star=P(), S_bar=P(), epochs_run=P(),
+        carry_mapping=P(), carry_feasible=P())
 
     shard_map = get_shard_map()
     fn = shard_map(local_match, mesh=mesh, in_specs=in_specs,
                    out_specs=out_specs)
+    return jax.jit(fn)
+
+
+def build_distributed_match_batch(Q_shape: Tuple[int, int], mesh: Mesh,
+                                  cfg: pso.PSOConfig,
+                                  axis_names: Sequence[str] = ("data",),
+                                  batch: int = 1):
+    """Returns a jit'd ``match(keys, Qb, Gb, maskb, carry0)`` solving a
+    stacked batch of B problems on the mesh.
+
+    ``keys`` is (B,) PRNG keys (one per problem); ``Qb``/``Gb``/``maskb``
+    are stacked on the leading problem axis and ``carry0`` holds stacked
+    per-problem warm-start carries. Two regimes:
+
+      * **problem-axis sharding** (B ≥ devices and divisible): each device
+        solves B/D whole problems locally — zero collectives, and each
+        problem's result is bit-identical to the single-device path.
+      * **per-problem particle sharding** (small B): falls back to the
+        collective-fused ``build_distributed_match`` executed per problem
+        (unrolled — B is static), stacking results on the problem axis.
+
+    Output layout matches ``pso.match_batch`` (problem axis after the
+    epoch axis on per-epoch leaves, leading elsewhere).
+    """
+    axis_names = tuple(axis_names)
+    num_shards = int(np.prod([mesh.shape[a] for a in axis_names]))
+
+    if batch >= num_shards and batch % num_shards == 0:
+        def local_match(keys, Qb, Gb, maskb, carry0):
+            return pso._match_batch_body(keys, Qb, Gb, maskb, cfg, carry0)
+
+        shard_b = P(axis_names)
+        in_specs = (shard_b, shard_b, shard_b, shard_b,
+                    (shard_b, shard_b, shard_b))
+        out_specs = dict(
+            mappings=P(None, axis_names), feasible=P(None, axis_names),
+            fitness=P(None, axis_names), f_star_trace=P(None, axis_names),
+            S_star=shard_b, f_star=shard_b, S_bar=shard_b,
+            epochs_run=shard_b, carry_mapping=shard_b,
+            carry_feasible=shard_b)
+        shard_map = get_shard_map()
+        fn = shard_map(local_match, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs)
+        return jax.jit(fn)
+
+    per_problem = build_distributed_match(Q_shape, mesh, cfg, axis_names)
+    per_epoch = ("mappings", "feasible", "fitness", "f_star_trace")
+
+    def fn(keys, Qb, Gb, maskb, carry0):
+        outs_list = []
+        for b in range(batch):
+            kb = jax.random.split(keys[b], num_shards)
+            cb = jax.tree_util.tree_map(lambda x: x[b], carry0)
+            outs_list.append(per_problem(kb, Qb[b], Gb[b], maskb[b], cb))
+        return {k: jnp.stack([o[k] for o in outs_list],
+                             axis=1 if k in per_epoch else 0)
+                for k in outs_list[0]}
+
     return jax.jit(fn)
 
 

@@ -55,6 +55,12 @@ class PSOConfig:
     prune_iters: int = 0             # 0 = iterate the pre-prune to fixpoint
     early_exit: bool = False         # stop epochs once a good mapping exists
     early_exit_fitness: float = float("-inf")   # "good" = feasible ∧ f ≥ this
+    carry_fastpath: bool = True      # with early_exit: verify the warm
+                                     # carry's S* by one projection and skip
+                                     # every epoch if it is still feasible
+    gumbel_tau: float = 0.0          # >0: per-particle Gumbel-perturbed
+                                     # structured projection (diversity after
+                                     # consensus collapse; off by default)
 
     def replace(self, **kw) -> "PSOConfig":
         return dataclasses.replace(self, **kw)
@@ -140,7 +146,10 @@ def run_epoch(carry, key, Q, G, mask, cfg: PSOConfig):
     controller state (S*, f*, S̄) persisted across epochs."""
     S_star, f_star, S_bar = carry
     n, m = mask.shape
-    k_init, k_steps = jax.random.split(key)
+    if cfg.gumbel_tau > 0:
+        k_init, k_steps, k_gum = jax.random.split(key, 3)
+    else:
+        k_init, k_steps = jax.random.split(key)
     S, V = init_particles(k_init, cfg.num_particles, mask)
     S_local = S
     f_local = _fitness(S, Q, G, cfg)
@@ -180,7 +189,19 @@ def run_epoch(carry, key, Q, G, mask, cfg: PSOConfig):
     #       lands on a consistent sub-DAG;
     #   (b) plain greedy argmax + Ullmann candidate refinement — wins on
     #       dense targets where the constructive greedy can dead-end.
-    M_a = jax.vmap(lambda s: ref.structured_project(s, Q, G, mask))(S)
+    # Optional per-particle Gumbel perturbation (ROADMAP diversity fix):
+    # deterministic projection maps every consensus-collapsed particle to
+    # the same assignment; adding τ-scaled Gumbel noise to log S makes the
+    # constructive argmax a sample from softmax(log S / τ') per row, so
+    # identical particles explore distinct assignments. τ=0 is exact
+    # deterministic projection (scores are a monotone transform of S).
+    if cfg.gumbel_tau > 0:
+        gum = jax.random.gumbel(k_gum, S.shape, dtype=jnp.float32)
+        S_proj_a = jnp.log(jnp.clip(S.astype(jnp.float32), 1e-9, None)) \
+            + cfg.gumbel_tau * gum
+    else:
+        S_proj_a = S
+    M_a = jax.vmap(lambda s: ref.structured_project(s, Q, G, mask))(S_proj_a)
     feas_a = jax.vmap(ref.is_feasible, in_axes=(0, None, None))(M_a, Q, G)
     M_proj = jax.vmap(lambda s: ops.greedy_project(s, mask,
                                                    backend=cfg.backend))(S)
@@ -211,6 +232,24 @@ def default_carry(mask: jax.Array):
     return (S_bar0, jnp.float32(-jnp.inf), S_bar0)
 
 
+def carry_fast_path(carry0, Q, G, mask, cfg: PSOConfig):
+    """Trust-but-verify the warm-start carry (§warm starts, microsecond
+    decisions): project the carried global best S* once and, if the result
+    is still a feasible mapping of this problem, the whole epoch scan can
+    be skipped — the previous decision is simply re-validated at the cost
+    of ONE structured projection instead of a swarm launch.
+
+    The cold prior (f* = -inf) never fast-paths, so cold calls are
+    bit-identical with or without the flag. Returns ``(M_c, ok)``.
+    """
+    S_star0, f_star0, _ = carry0
+    M_c = ref.structured_project(S_star0, Q, G, mask).astype(jnp.uint8)
+    ok = (ref.is_feasible(M_c, Q, G)
+          & (f_star0 > jnp.float32(-jnp.inf))
+          & (f_star0 >= cfg.early_exit_fitness))
+    return M_c, ok
+
+
 def _skip_epoch_outs(carry, n, m, cfg: PSOConfig):
     """Shape-matched placeholder outputs for an early-exited epoch."""
     _, f_star, _ = carry
@@ -229,7 +268,7 @@ def epoch_found(outs, cfg: PSOConfig) -> jax.Array:
 
 
 def scan_epochs(run_one, carry0, keys, n, m, cfg: PSOConfig,
-                all_found=None):
+                all_found=None, done0=None):
     """Scan ``run_one(carry, k) -> (carry, outs)`` over the epoch keys,
     optionally gated by ``cfg.early_exit`` (skipped epochs cost one
     predicated branch and emit shape-matched empty outputs).
@@ -238,6 +277,8 @@ def scan_epochs(run_one, carry0, keys, n, m, cfg: PSOConfig,
     ``all_found`` (distributed matcher) fuses the local found-predicate
     across the mesh so every shard takes the same branch — the predicate
     must be replicated or the collectives inside ``run_one`` deadlock.
+    ``done0`` pre-marks the problem as solved before any epoch runs (the
+    warm-carry fast path); it must likewise be replicated.
 
     Returns ``(carry, outs, epochs_run)``.
     """
@@ -262,7 +303,9 @@ def scan_epochs(run_one, carry0, keys, n, m, cfg: PSOConfig,
         n_run = n_run + (~done_prev).astype(jnp.int32)
         return (carry2, done, n_run), outs
 
-    state0 = (carry0, jnp.bool_(False), jnp.int32(0))
+    state0 = (carry0,
+              jnp.bool_(False) if done0 is None else done0,
+              jnp.int32(0))
     (carry, _, epochs_run), outs = jax.lax.scan(epoch_step, state0, keys)
     return carry, outs, epochs_run
 
@@ -275,17 +318,132 @@ def _match_body(key: jax.Array, Q: jax.Array, G: jax.Array, mask: jax.Array,
                                        ).astype(mask.dtype)
     keys = jax.random.split(key, cfg.epochs)
 
+    if cfg.early_exit and cfg.carry_fastpath:
+        M_c, carry_ok = carry_fast_path(carry0, Q, G, mask, cfg)
+    else:
+        M_c = jnp.zeros((n, m), jnp.uint8)
+        carry_ok = jnp.bool_(False)
+
     def run_one(carry, k):
         carry, outs = run_epoch(carry, k, Q, G, mask, cfg)
         del outs["S_final"]  # only needed by the distributed consensus
         return carry, outs
 
     (S_star, f_star, S_bar), outs, epochs_run = scan_epochs(
-        run_one, carry0, keys, n, m, cfg)
+        run_one, carry0, keys, n, m, cfg, done0=carry_ok)
     outs["S_star"] = S_star
     outs["f_star"] = f_star
     outs["S_bar"] = S_bar
     outs["epochs_run"] = epochs_run
+    outs["carry_mapping"] = M_c
+    outs["carry_feasible"] = carry_ok
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# Batched problem axis B (coalesced concurrent arrivals)
+# ---------------------------------------------------------------------------
+
+def default_carry_batch(maskb: jax.Array):
+    """Cold controller state for a stacked (B, n, m) mask batch."""
+    return jax.vmap(default_carry)(maskb)
+
+
+def scan_epochs_batch(run_one, carry0, keys, n, m, cfg: PSOConfig,
+                      done0=None):
+    """Batched-problem variant of ``scan_epochs``.
+
+    ``run_one(carry_b, keys_b) -> (carry_b, outs_b)`` runs one epoch for
+    every problem in the batch (all leaves carry a leading problem axis B;
+    ``keys`` is (T, B) epoch keys). Early exit is *per problem*: a problem
+    that already found a mapping has its carry frozen and its outputs
+    replaced by the shape-matched skip placeholders — exactly what the
+    single-problem ``scan_epochs`` skip branch produces — so one finished
+    problem never stalls or perturbs the rest of the batch. Whole-batch
+    compute is only skipped (one predicated branch) once *every* problem
+    is done.
+
+    Returns ``(carry, outs, epochs_run)`` with ``epochs_run`` shaped (B,).
+    """
+    B = jax.tree_util.tree_leaves(carry0)[0].shape[0]
+    if not cfg.early_exit:
+        carry, outs = jax.lax.scan(run_one, carry0, keys)
+        return carry, outs, jnp.full((B,), cfg.epochs, jnp.int32)
+
+    skip_outs_b = jax.vmap(lambda c: _skip_epoch_outs(c, n, m, cfg))
+
+    def epoch_step(state, k_b):
+        carry, done_prev, n_run = state
+
+        def live(_):
+            carry2, outs = run_one(carry, k_b)
+            # freeze finished problems: keep their old carry, emit the
+            # same placeholder outputs the single-problem skip branch does
+            def keep(old, new):
+                d = done_prev.reshape((B,) + (1,) * (new.ndim - 1))
+                return jnp.where(d, old, new)
+            carry2 = jax.tree_util.tree_map(keep, carry, carry2)
+            outs = jax.tree_util.tree_map(keep, skip_outs_b(carry), outs)
+            return carry2, outs
+
+        def skip(_):
+            return carry, skip_outs_b(carry)
+
+        carry2, outs = jax.lax.cond(jnp.all(done_prev), skip, live, None)
+        found = jax.vmap(lambda o: epoch_found(o, cfg))(outs)
+        done = done_prev | found
+        n_run = n_run + (~done_prev).astype(jnp.int32)
+        return (carry2, done, n_run), outs
+
+    state0 = (carry0,
+              jnp.zeros((B,), bool) if done0 is None else done0,
+              jnp.zeros((B,), jnp.int32))
+    (carry, _, epochs_run), outs = jax.lax.scan(epoch_step, state0, keys)
+    return carry, outs, epochs_run
+
+
+def _match_batch_body(keys: jax.Array, Qb: jax.Array, Gb: jax.Array,
+                      maskb: jax.Array, cfg: PSOConfig, carry0):
+    """Algorithm 1 vmapped over a leading problem axis B.
+
+    ``keys`` is (B,) PRNG keys — one per problem, split per problem into
+    epoch keys so problem b consumes exactly the key stream a sequential
+    ``match(keys[b], ...)`` would.
+    """
+    B, n, m = maskb.shape
+    if cfg.prune_mask:
+        maskb = jax.vmap(
+            lambda mk, Q, G: ref.prune_mask_fixpoint(mk, Q, G,
+                                                     cfg.prune_iters)
+        )(maskb, Qb, Gb).astype(maskb.dtype)
+    # (B, T) epoch keys -> (T, B) for the scan
+    epoch_keys = jax.vmap(lambda k: jax.random.split(k, cfg.epochs))(keys)
+    epoch_keys = jnp.swapaxes(epoch_keys, 0, 1)
+
+    if cfg.early_exit and cfg.carry_fastpath:
+        M_c, carry_ok = jax.vmap(
+            lambda c, Q, G, mk: carry_fast_path(c, Q, G, mk, cfg)
+        )(carry0, Qb, Gb, maskb)
+    else:
+        M_c = jnp.zeros((B, n, m), jnp.uint8)
+        carry_ok = jnp.zeros((B,), bool)
+
+    run_epoch_b = jax.vmap(
+        lambda carry, k, Q, G, mk: run_epoch(carry, k, Q, G, mk, cfg))
+
+    def run_one(carry, k_b):
+        carry, outs = run_epoch_b(carry, k_b, Qb, Gb, maskb)
+        del outs["S_final"]  # only needed by the distributed consensus
+        return carry, outs
+
+    (S_star, f_star, S_bar), outs, epochs_run = scan_epochs_batch(
+        run_one, carry0, epoch_keys, n, m, cfg, done0=carry_ok)
+    outs["S_star"] = S_star
+    outs["f_star"] = f_star
+    outs["S_bar"] = S_bar
+    outs["epochs_run"] = epochs_run
+    outs["carry_mapping"] = M_c
+    outs["carry_feasible"] = carry_ok
     return outs
 
 
@@ -293,6 +451,30 @@ def _match_body(key: jax.Array, Q: jax.Array, G: jax.Array, mask: jax.Array,
 # ``MatcherService`` builds its *own* per-bucket jit wrappers around
 # ``_match_body`` so cached executables have a bounded, evictable lifetime.
 _match_impl = functools.partial(jax.jit, static_argnames=("cfg",))(_match_body)
+
+_match_batch_impl = functools.partial(jax.jit, static_argnames=("cfg",))(
+    _match_batch_body)
+
+
+def match_batch(keys: jax.Array, Qb: jax.Array, Gb: jax.Array,
+                maskb: jax.Array, cfg: PSOConfig, carry0=None):
+    """Batched Algorithm 1: B problems solved in one dispatch.
+
+    Inputs are stacked on a leading problem axis: ``keys`` (B,) PRNG keys,
+    ``Qb`` (B, n, n), ``Gb`` (B, m, m), ``maskb`` (B, n, m); ``carry0``
+    optionally warm-starts each problem with its own ``(S*, f*, S̄)``
+    (stack per-problem carries; ``None`` is the cold prior for all).
+
+    Returns the ``match`` output pytree with a problem axis after the
+    epoch axis: mappings (T, B, N, n, m), feasible/fitness (T, B, N),
+    f_star_trace (T, B, K), S_star (B, n, m), f_star (B,), S_bar
+    (B, n, m), epochs_run (B,) — each problem's slice equals what an
+    independent ``match(keys[b], ...)`` returns (per-problem early exit
+    included).
+    """
+    if carry0 is None:
+        carry0 = default_carry_batch(jnp.asarray(maskb))
+    return _match_batch_impl(keys, Qb, Gb, maskb, cfg, carry0)
 
 
 def match(key: jax.Array, Q: jax.Array, G: jax.Array, mask: jax.Array,

@@ -21,8 +21,20 @@ when tasks arrive unpredictably at microsecond granularity. The
   * **Early exit** — the service enables ``cfg.early_exit`` so easy
     matches stop scanning epochs once a feasible mapping clears the
     fitness bound (1 epoch instead of T on planted instances).
+  * **Request coalescing** — concurrent arrivals queue via ``submit`` and
+    ``drain`` flushes every same-bucket request in one *batched* launch
+    (``pso.match_batch``): K problems in an event window pay one jit
+    dispatch and one swarm warm-up instead of K. Batch size is padded to
+    a small set of classes (``batch_classes``, default 1/2/4/8) that
+    joins the compile-cache key, so the executable set stays bounded;
+    per-problem warm-start carries are gathered before and scattered
+    after the launch. Per-problem early exit keeps each problem's
+    *results* and epoch accounting identical to a solo call, but the
+    launch's wall time is that of its hardest member — every request in
+    the batch is charged the same ``latency_s`` (coalesce warm/servable
+    traffic; a mixed cold burst can be slower than sequential).
 
-Statistics for all three mechanisms are exported via ``stats`` /
+Statistics for all four mechanisms are exported via ``stats`` /
 ``stats_dict()`` and surfaced by ``sched.metrics``.
 """
 from __future__ import annotations
@@ -31,7 +43,7 @@ import dataclasses
 import hashlib
 import time
 from collections import OrderedDict
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +53,8 @@ from repro.core import pso
 from repro.core.graphs import (Graph, compatibility_mask,
                                topological_relabel)
 from repro.core.matcher import (MatchResult, build_distributed_match,
-                                collect_result)
+                                build_distributed_match_batch,
+                                collect_batch_results, collect_result)
 from repro.core.preemptible_dag import pad_problem
 
 
@@ -74,6 +87,11 @@ class ServiceStats:
     epochs_run: int = 0              # total epochs actually executed
     epochs_budgeted: int = 0         # cfg.epochs × calls
     found: int = 0
+    batch_launches: int = 0          # batched executions dispatched
+    coalesced_requests: int = 0      # requests served in a shared launch
+    batch_problems: int = 0          # real problems through the batch path
+    batch_slots: int = 0             # padded batch slots launched
+    carry_fastpath_hits: int = 0     # warm carries re-validated, 0 epochs
 
     @property
     def epochs_saved(self) -> int:
@@ -87,13 +105,34 @@ class ServiceStats:
     def warm_hit_rate(self) -> float:
         return self.warm_hits / max(self.calls, 1)
 
+    @property
+    def batch_occupancy(self) -> float:
+        """Real problems per launched batch slot (1.0 = no padding waste)."""
+        return self.batch_problems / max(self.batch_slots, 1)
+
 
 @dataclasses.dataclass
 class ServiceMatchResult(MatchResult):
     bucket: Tuple[int, int] = (0, 0)
     compile_cache_hit: bool = False
     warm_hit: bool = False
-    latency_s: float = 0.0
+    latency_s: float = 0.0           # launch wall time (shared by a batch)
+    batch_size: int = 1              # real problems in the launch
+    coalesced: bool = False          # served together with other requests
+
+
+@dataclasses.dataclass
+class _PendingRequest:
+    """A submitted problem, pre-padded to its shape bucket so ``drain``
+    can group by bucket without touching the graphs again."""
+    key: jax.Array
+    workload_key: object
+    order: np.ndarray
+    crop: Tuple[int, int]
+    bucket: Tuple[int, int]
+    Qp: np.ndarray
+    Gp: np.ndarray
+    maskp: np.ndarray
 
 
 class MatcherService:
@@ -107,7 +146,8 @@ class MatcherService:
                  mesh=None, axis_names: Sequence[str] = ("data",),
                  cache_capacity: int = 16, warm_capacity: int = 256,
                  warm_start: bool = True, early_exit: bool = True,
-                 n_multiple: int = 8, m_multiple: int = 16):
+                 n_multiple: int = 8, m_multiple: int = 16,
+                 batch_classes: Sequence[int] = (1, 2, 4, 8)):
         cfg = cfg or pso.PSOConfig()
         if early_exit and not cfg.early_exit:
             cfg = cfg.replace(early_exit=True)
@@ -119,17 +159,32 @@ class MatcherService:
         self.warm_start = warm_start
         self.n_multiple = n_multiple
         self.m_multiple = m_multiple
+        self.batch_classes = tuple(sorted(set(int(b) for b in batch_classes)))
+        assert self.batch_classes and self.batch_classes[0] >= 1
         self.stats = ServiceStats()
-        self._compiled: "OrderedDict[Tuple[int, int], object]" = OrderedDict()
+        self._compiled: "OrderedDict[Tuple, object]" = OrderedDict()
         self._warm: "OrderedDict[Tuple, tuple]" = OrderedDict()
+        self._pending: List[_PendingRequest] = []
 
     # -- caches ------------------------------------------------------------
 
-    def _executable(self, bucket: Tuple[int, int]):
-        fn = self._compiled.get(bucket)
+    def _cache_put(self, cache_key, fn):
+        self._compiled[cache_key] = fn
+        while len(self._compiled) > self.cache_capacity:
+            self._compiled.popitem(last=False)
+            self.stats.compile_evictions += 1
+        return fn
+
+    def _cache_get(self, cache_key):
+        fn = self._compiled.get(cache_key)
         if fn is not None:
-            self._compiled.move_to_end(bucket)
+            self._compiled.move_to_end(cache_key)
             self.stats.compile_cache_hits += 1
+        return fn
+
+    def _executable(self, bucket: Tuple[int, int]):
+        fn = self._cache_get(bucket)
+        if fn is not None:
             return fn
         self.stats.compile_cache_misses += 1
         if self.mesh is None:
@@ -142,11 +197,34 @@ class MatcherService:
         else:
             fn = build_distributed_match(bucket, self.mesh, self.cfg,
                                          self.axis_names)
-        self._compiled[bucket] = fn
-        while len(self._compiled) > self.cache_capacity:
-            self._compiled.popitem(last=False)
-            self.stats.compile_evictions += 1
-        return fn
+        return self._cache_put(bucket, fn)
+
+    def _executable_batch(self, bucket: Tuple[int, int], bclass: int):
+        """One executable per (shape bucket, padded batch class)."""
+        cache_key = (bucket, bclass)
+        fn = self._cache_get(cache_key)
+        if fn is not None:
+            return fn
+        self.stats.compile_cache_misses += 1
+        if self.mesh is None:
+            cfg = self.cfg
+
+            def fn(keys, Qb, Gb, maskb, carry0, _cfg=cfg):
+                return pso._match_batch_body(keys, Qb, Gb, maskb, _cfg,
+                                             carry0)
+
+            fn = jax.jit(fn)
+        else:
+            fn = build_distributed_match_batch(bucket, self.mesh, self.cfg,
+                                               self.axis_names, bclass)
+        return self._cache_put(cache_key, fn)
+
+    def _batch_class(self, k: int) -> int:
+        """Smallest padded batch class holding k problems."""
+        for c in self.batch_classes:
+            if c >= k:
+                return c
+        return self.batch_classes[-1]
 
     def _warm_key(self, workload_key, Qp, Gp, maskp) -> Tuple:
         """Warm starts are only valid for the *same* problem (f* values are
@@ -177,6 +255,21 @@ class MatcherService:
 
     # -- matching ----------------------------------------------------------
 
+    def _prepare(self, query: Graph, target: Graph, key, workload_key
+                 ) -> _PendingRequest:
+        """Relabel, bucket and pad a problem on the host — the jit call
+        uploads Qp/Gp/maskp once; no device→host→device round trip."""
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        q, order = topological_relabel(query)
+        n, m = q.n, target.n
+        mask = compatibility_mask(q, target)
+        bucket = shape_bucket(n, m, self.n_multiple, self.m_multiple)
+        Qp, Gp, maskp = pad_problem(q.adj, target.adj, mask, *bucket)
+        return _PendingRequest(key=key, workload_key=workload_key,
+                               order=order, crop=(n, m), bucket=bucket,
+                               Qp=Qp, Gp=Gp, maskp=maskp)
+
     def match(self, query: Graph, target: Graph,
               key: Optional[jax.Array] = None,
               workload_key=None) -> ServiceMatchResult:
@@ -189,16 +282,10 @@ class MatcherService:
         """
         t0 = time.perf_counter()
         self.stats.calls += 1
-        if key is None:
-            key = jax.random.PRNGKey(0)
-
-        q, order = topological_relabel(query)
-        n, m = q.n, target.n
-        # stay on the host until the padded problem is final — the jit call
-        # uploads Qp/Gp/maskp once; no device→host→device round trip
-        mask = compatibility_mask(q, target)
-        bucket = shape_bucket(n, m, self.n_multiple, self.m_multiple)
-        Qp, Gp, maskp = pad_problem(q.adj, target.adj, mask, *bucket)
+        req = self._prepare(query, target, key, workload_key)
+        key, bucket = req.key, req.bucket
+        order, (n, m) = req.order, req.crop
+        Qp, Gp, maskp = req.Qp, req.Gp, req.maskp
 
         hits_before = self.stats.compile_cache_hits
         fn = self._executable(bucket)
@@ -225,11 +312,132 @@ class MatcherService:
         self.stats.epochs_budgeted += self.cfg.epochs
         if res.found:
             self.stats.found += 1
+        if res.carry_verified:
+            self.stats.carry_fastpath_hits += 1
         res.bucket = bucket
         res.compile_cache_hit = compile_hit
         res.warm_hit = warm_hit
         res.latency_s = time.perf_counter() - t0
         return res
+
+    # -- request coalescing ------------------------------------------------
+
+    def submit(self, query: Graph, target: Graph,
+               key: Optional[jax.Array] = None, workload_key=None) -> int:
+        """Queue a problem for the next ``drain``; returns its ticket
+        index into the results list ``drain`` will return."""
+        self._pending.append(self._prepare(query, target, key, workload_key))
+        return len(self._pending) - 1
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    def drain(self) -> List[ServiceMatchResult]:
+        """Flush the pending queue: all same-bucket requests coalesce into
+        padded batch launches (one jit dispatch each), largest batch class
+        first. Results come back in submission order; every request in a
+        launch reports the same ``latency_s`` (the batch is one decision —
+        its cost is paid once, not per problem)."""
+        pending, self._pending = self._pending, []
+        if not pending:
+            return []
+        results: List[Optional[ServiceMatchResult]] = [None] * len(pending)
+        groups: "OrderedDict[Tuple[int, int], List[int]]" = OrderedDict()
+        for i, req in enumerate(pending):
+            groups.setdefault(req.bucket, []).append(i)
+        max_chunk = self.batch_classes[-1]
+        for bucket, idxs in groups.items():
+            for pos in range(0, len(idxs), max_chunk):
+                chunk = idxs[pos:pos + max_chunk]
+                self._launch_batch(bucket, [pending[i] for i in chunk],
+                                   chunk, results)
+        return results  # type: ignore[return-value]
+
+    def match_many(self, problems: Sequence[Tuple[Graph, Graph]],
+                   keys: Optional[Sequence[jax.Array]] = None,
+                   workload_keys: Optional[Sequence] = None
+                   ) -> List[ServiceMatchResult]:
+        """Convenience: submit a burst of (query, target) problems and
+        drain them as coalesced batch launches."""
+        for i, (q, g) in enumerate(problems):
+            self.submit(q, g,
+                        key=None if keys is None else keys[i],
+                        workload_key=(None if workload_keys is None
+                                      else workload_keys[i]))
+        return self.drain()
+
+    def _launch_batch(self, bucket, reqs: List[_PendingRequest],
+                      tickets: List[int], results: List) -> None:
+        """One coalesced launch: gather per-problem warm carries, pad the
+        problem stack to the batch class, run, scatter results+carries."""
+        t0 = time.perf_counter()
+        B = len(reqs)
+        bclass = self._batch_class(B)
+        self.stats.calls += B
+
+        hits_before = self.stats.compile_cache_hits
+        fn = self._executable_batch(bucket, bclass)
+        compile_hit = self.stats.compile_cache_hits > hits_before
+
+        warm_keys, carries, warm_hits = [], [], []
+        for req in reqs:
+            wk = self._warm_key(req.workload_key, req.Qp, req.Gp, req.maskp)
+            carry, hit = self._get_carry(wk)
+            if carry is None:
+                carry = pso.default_carry(jnp.asarray(req.maskp))
+            warm_keys.append(wk)
+            carries.append(carry)
+            warm_hits.append(hit)
+
+        # pad the stack to the batch class by replicating problem 0
+        # verbatim — same key AND same carry, so every pad slot follows
+        # problem 0's exact trajectory and is done the instant it is:
+        # padding never extends the batch's live-epoch window (its only
+        # cost is the slot width). Results are discarded.
+        # All stacking stays on the host (numpy): the jit call uploads each
+        # stacked array once — no per-problem device dispatches.
+        pad = bclass - B
+        padded = reqs + [reqs[0]] * pad
+        carries = carries + [carries[0]] * pad
+        keysb = np.stack([np.asarray(r.key) for r in padded])
+        Qb = np.stack([r.Qp for r in padded])
+        Gb = np.stack([r.Gp for r in padded])
+        maskb = np.stack([r.maskp for r in padded])
+        carry0 = tuple(np.stack([np.asarray(c[i]) for c in carries])
+                       for i in range(3))
+
+        outs = fn(keysb, Qb, Gb, maskb, carry0)
+        batch_results = collect_batch_results(
+            outs, bclass,
+            orders=[r.order for r in padded],
+            crops=[r.crop for r in padded])
+        latency = time.perf_counter() - t0
+
+        self.stats.batch_launches += 1
+        self.stats.batch_problems += B
+        self.stats.batch_slots += bclass
+        if B > 1:
+            self.stats.coalesced_requests += B
+        for j, (req, ticket) in enumerate(zip(reqs, tickets)):
+            base = batch_results[j]
+            res = ServiceMatchResult(
+                **{f.name: getattr(base, f.name)
+                   for f in dataclasses.fields(MatchResult)})
+            self._put_carry(warm_keys[j], res.carry)
+            self.stats.epochs_run += res.epochs_run
+            self.stats.epochs_budgeted += self.cfg.epochs
+            if res.found:
+                self.stats.found += 1
+            if res.carry_verified:
+                self.stats.carry_fastpath_hits += 1
+            res.bucket = bucket
+            res.compile_cache_hit = compile_hit
+            res.warm_hit = warm_hits[j]
+            res.latency_s = latency
+            res.batch_size = B
+            res.coalesced = B > 1
+            results[ticket] = res
 
     # -- reporting ---------------------------------------------------------
 
@@ -247,4 +455,10 @@ class MatcherService:
             "epochs_budgeted": s.epochs_budgeted,
             "epochs_saved": s.epochs_saved,
             "found": s.found,
+            "batch_launches": s.batch_launches,
+            "coalesced_requests": s.coalesced_requests,
+            "batch_problems": s.batch_problems,
+            "batch_slots": s.batch_slots,
+            "batch_occupancy": s.batch_occupancy,
+            "carry_fastpath_hits": s.carry_fastpath_hits,
         }

@@ -1,4 +1,5 @@
-from repro.sched.tasks import TaskSpec, Scenario, make_scenario
+from repro.sched.tasks import (TaskSpec, Scenario, make_burst_scenario,
+                               make_scenario)
 from repro.sched.simulator import Simulator, SimConfig, SimResult
 from repro.sched.schedulers import (SCHEDULERS, IMMSchedScheduler,
                                     IsoSchedScheduler, LTSScheduler,

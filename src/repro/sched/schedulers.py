@@ -14,6 +14,15 @@ dispatch of tasks whose scheduling delay has elapsed. Engines freed for a
 delayed urgent task are *reserved* until it activates so preempted victims
 cannot bounce back onto them.
 
+``arrived`` is the LIST of all tasks that became schedulable at this
+instant (the simulator coalesces simultaneous/burst arrivals into one
+event). IMMSched makes one batched matching decision for the burst and
+charges its latency once. IsoSched's serial host matcher processes the
+burst one problem at a time, queueing on the single CPU. LTS baselines
+re-solve their global layout/priority state once per event — one
+re-solve covers the burst, the conservative (cheapest-for-baseline)
+reading of how those frameworks respond to a scheduling trigger.
+
 Paradigms:
   * IMMSched      — TSS, interruptible: subgraph matching ON the accelerator
                     (parallel PSO-Ullmann; μs-scale), adaptive preemption
@@ -153,15 +162,21 @@ class IMMSchedScheduler(SchedulerBase):
         if trigger == "activate":
             return self._dispatch(sim, now, tasks)
         decision = _empty_decision()
-        if trigger == "arrival" and arrived is not None:
-            if arrived.spec.urgent:
-                self._interrupt(sim, now, tasks, arrived, decision)
-            else:
-                n = self._window_tiles(sim, arrived)
+        if trigger == "arrival" and arrived:
+            urgent = [t for t in arrived if t.spec.urgent]
+            normal = [t for t in arrived if not t.spec.urgent]
+            if urgent:
+                self._interrupt(sim, now, tasks, urgent, decision)
+            if normal:
+                # the whole burst is matched in ONE coalesced swarm
+                # launch: cost of the largest window, charged once,
+                # shared by every task in the batch
+                n = max(self._window_tiles(sim, t) for t in normal)
                 st, se = sim.cost.sched_immsched(
                     min(n, 64), sim.platform.engines, sim.cfg.pso_cfg,
                     max(min(n, sim.platform.engines) // 2, 1))
-                decision["delay"][arrived.spec.task_id] = st
+                for t in normal:
+                    decision["delay"][t.spec.task_id] = st
                 decision["energy"] += se
         elif trigger == "completion":
             waiting = self._waiting(tasks)
@@ -174,7 +189,11 @@ class IMMSchedScheduler(SchedulerBase):
                 decision["energy"] += se
         return self._dispatch(sim, now, tasks, decision)
 
-    def _interrupt(self, sim, now, tasks, urgent, decision):
+    def _interrupt(self, sim, now, tasks, urgent_list, decision):
+        """Free engines for a burst of urgent tasks: victim selection runs
+        per task against the shrinking pool, but the subgraph matchings of
+        the whole burst go out as ONE batched service decision, and the
+        burst pays one (the largest) scheduling latency — not K of them."""
         running = [
             interrupts.RunningTask(
                 task_id=t.spec.task_id, priority=t.spec.priority,
@@ -183,45 +202,90 @@ class IMMSchedScheduler(SchedulerBase):
                 deadline=t.spec.deadline, live_bytes=t.live_bytes)
             for t in tasks if t.status == "running"]
         free = self._free_engines(sim, tasks)
-        n = self._window_tiles(sim, urgent)
-        est_exec = urgent.remaining_time(min(n, sim.platform.engines))
-        ratio = interrupts.adaptive_preemption_ratio(
-            est_exec, urgent.spec.deadline - now)
-        need = interrupts.engines_needed_for(n, sim.platform.engines, ratio)
-        dec = interrupts.select_victims(running, free, need,
-                                        urgent.spec.priority, now)
-        engines = dec.freed_engines[:need]
-        m = max(len(dec.freed_engines), 1)
-        st, se = sim.cost.sched_immsched(min(n, 64), m, sim.cfg.pso_cfg,
-                                         max(len(engines), 1))
+        preempted: set = set()
+        grants = []          # (urgent, engines, freed_engines, need)
+        st_batch = se_batch = 0.0
+        for urgent in urgent_list:
+            live = [r for r in running if r.task_id not in preempted]
+            n = self._window_tiles(sim, urgent)
+            est_exec = urgent.remaining_time(min(n, sim.platform.engines))
+            ratio = interrupts.adaptive_preemption_ratio(
+                est_exec, urgent.spec.deadline - now)
+            need = interrupts.engines_needed_for(n, sim.platform.engines,
+                                                 ratio)
+            dec = interrupts.select_victims(live, free, need,
+                                            urgent.spec.priority, now)
+            engines = dec.freed_engines[:need]
+            m = max(len(dec.freed_engines), 1)
+            st, se = sim.cost.sched_immsched(min(n, 64), m, sim.cfg.pso_cfg,
+                                             max(len(engines), 1))
+            # one batched launch: latency = slowest problem in the batch,
+            # energy = one swarm (the problems share it), not K swarms
+            st_batch = max(st_batch, st)
+            se_batch = max(se_batch, se)
+            preempted.update(dec.victims)
+            decision["preempt"].extend(dec.victims)
+            # engines this task did not take stay idle for the next one
+            free = [e for e in dec.freed_engines if e not in set(engines)]
+            grants.append((urgent, engines, dec.freed_engines, need))
         if sim.cfg.matcher_mode == "real":
-            mapped = self._real_match(sim, urgent, dec.freed_engines)
-            if mapped:
-                engines = mapped[:max(need, 1)]
-        decision["preempt"].extend(dec.victims)
-        decision["delay"][urgent.spec.task_id] = st
-        decision["energy"] += se
-        self._reserved[urgent.spec.task_id] = engines
+            mapped = self._real_match_batch(
+                sim, [(u, freed) for u, _, freed, _ in grants])
+            for i, (urgent, engines, freed, need) in enumerate(grants):
+                if mapped[i]:
+                    grants[i] = (urgent, mapped[i][:max(need, 1)],
+                                 freed, need)
+        # deconflict: a real-match maps over its task's FULL freed set, so
+        # a later grant may land on engines an earlier task already took —
+        # reservations must stay disjoint within the burst. A fully
+        # claimed grant falls back to its own freed list, then to any
+        # engine freed for the burst as a whole.
+        all_freed = [e for _, _, freed, _ in grants for e in freed]
+        claimed: Set[int] = set()
+        for urgent, engines, freed, need in grants:
+            engines = [e for e in engines if e not in claimed]
+            if not engines:
+                pool = ([e for e in freed if e not in claimed]
+                        or [e for e in all_freed if e not in claimed])
+                engines = pool[:max(need, 1)]
+            claimed.update(engines)
+            decision["delay"][urgent.spec.task_id] = st_batch
+            self._reserved[urgent.spec.task_id] = engines
+        decision["energy"] += se_batch
 
-    def _real_match(self, sim, urgent, freed) -> Optional[List[int]]:
-        pd = self._pdag(sim, urgent)
-        free = [e in set(freed) for e in range(sim.platform.engines)]
-        tgt = free_engine_graph(sim.platform, free)
-        if pd.n == 0 or tgt.n < 4:
-            return None
-        q = pd.graph
-        if q.n > tgt.n:
-            keep = np.sort(np.argsort([t.stage for t in pd.tiles])[:tgt.n])
-            q = type(q)(adj=q.adj[np.ix_(keep, keep)], types=q.types[keep],
-                        weights=q.weights[keep])
-        res = self._service.match(
-            q, tgt,
-            workload_key=(urgent.spec.name, free_engine_signature(free)))
-        if not res.found:
-            return None
-        engine_ids = tgt.weights.astype(int)
-        _, cols = np.where(res.mapping)
-        return [int(engine_ids[c]) for c in cols]
+    def _real_match_batch(self, sim, pairs) -> List[Optional[List[int]]]:
+        """Run the burst's matchings as one coalesced service launch.
+        ``pairs``: (urgent_task, freed_engine_list) per urgent arrival.
+        Returns per-task engine lists (None where no match)."""
+        problems, wkeys, targets, slots = [], [], [], []
+        for urgent, freed in pairs:
+            pd = self._pdag(sim, urgent)
+            free = [e in set(freed) for e in range(sim.platform.engines)]
+            tgt = free_engine_graph(sim.platform, free)
+            if pd.n == 0 or tgt.n < 4:
+                slots.append(None)
+                continue
+            q = pd.graph
+            if q.n > tgt.n:
+                keep = np.sort(np.argsort(
+                    [t.stage for t in pd.tiles])[:tgt.n])
+                q = type(q)(adj=q.adj[np.ix_(keep, keep)],
+                            types=q.types[keep], weights=q.weights[keep])
+            slots.append(len(problems))
+            problems.append((q, tgt))
+            targets.append(tgt)
+            wkeys.append((urgent.spec.name, free_engine_signature(free)))
+        results = (self._service.match_many(problems, workload_keys=wkeys)
+                   if problems else [])
+        out: List[Optional[List[int]]] = []
+        for slot in slots:
+            if slot is None or not results[slot].found:
+                out.append(None)
+                continue
+            engine_ids = targets[slot].weights.astype(int)
+            _, cols = np.where(results[slot].mapping)
+            out.append([int(engine_ids[c]) for c in cols])
+        return out
 
 
 class IsoSchedScheduler(SchedulerBase):
@@ -233,30 +297,45 @@ class IsoSchedScheduler(SchedulerBase):
         if trigger == "activate":
             return self._dispatch(sim, now, tasks)
         decision = _empty_decision()
-        target = None
-        if trigger == "arrival" and arrived is not None:
-            target = arrived
-            if arrived.spec.urgent:
+        # serial host matcher: a burst is processed ONE problem at a time,
+        # each queueing behind the previous on the single CPU. Victim
+        # selection tracks the burst's earlier picks (task statuses only
+        # change when the decision is applied) so reservations stay
+        # disjoint, as they were when each arrival was its own event.
+        targets = []
+        if trigger == "arrival" and arrived:
+            targets = list(arrived)
+            preempted: Set[int] = set()
+            claimed: Set[int] = set()
+            for a in arrived:
+                if not a.spec.urgent:
+                    continue
                 running = [
                     interrupts.RunningTask(
                         task_id=t.spec.task_id, priority=t.spec.priority,
                         engines=list(t.engines),
                         remaining_time=t.remaining_time(len(t.engines)),
                         deadline=t.spec.deadline, live_bytes=t.live_bytes)
-                    for t in tasks if t.status == "running"]
-                free = self._free_engines(sim, tasks)
-                n = self._window_tiles(sim, arrived)
+                    for t in tasks
+                    if t.status == "running"
+                    and t.spec.task_id not in preempted]
+                free = [e for e in self._free_engines(sim, tasks)
+                        if e not in claimed]
+                n = self._window_tiles(sim, a)
                 need = interrupts.engines_needed_for(
                     n, sim.platform.engines, 1.0)
                 dec = interrupts.select_victims(
-                    running, free, need, arrived.spec.priority, now)
+                    running, free, need, a.spec.priority, now)
+                preempted.update(dec.victims)
                 decision["preempt"].extend(dec.victims)
-                self._reserved[arrived.spec.task_id] = \
-                    dec.freed_engines[:need]
+                engines = [e for e in dec.freed_engines
+                           if e not in claimed][:need]
+                claimed.update(engines)
+                self._reserved[a.spec.task_id] = engines
         elif trigger == "completion":
             waiting = self._waiting(tasks)
-            target = waiting[0] if waiting else None
-        if target is not None:
+            targets = waiting[:1]
+        for target in targets:
             st, se = self._serial_match_cost(sim, target, now)
             decision["delay"][target.spec.task_id] = st
             decision["energy"] += se
@@ -368,9 +447,11 @@ class LTSScheduler(SchedulerBase):
                 range(sim.platform.engines))
             return decision
 
-        # fission variants: recompute proportional spatial shares
-        if arrived is not None:
-            decision["delay"][arrived.spec.task_id] = st
+        # fission variants: recompute proportional spatial shares (one
+        # layout re-solve covers the whole burst; each task still waits
+        # out the scheduling latency before activation)
+        for a in (arrived or []):
+            decision["delay"][a.spec.task_id] = st
         return self._fission_alloc(sim, now, tasks, decision)
 
     def _fission_alloc(self, sim, now, tasks, decision):

@@ -15,6 +15,12 @@ made at time t with scheduling latency L delays the task's start to t+L
 further cost. Serial CPU schedulers additionally contend for the single
 host CPU via their own ``cpu_free_at`` bookkeeping.
 
+Arrival events are *coalesced*: every task arriving at the same instant
+(compound-Poisson bursts) is delivered to the scheduler in ONE
+``on_event(trigger="arrival", arrived=[...])`` call, so batching-aware
+schedulers (IMMSched's coalesced matcher launches) can make one decision
+for the whole burst and pay its latency once.
+
 Energy: execution energy is charged pro-rata with drained work (preemption
 context-motion costs are folded into the task's buckets and energy);
 idle-engine leakage and scheduling energy are integrated on top.
@@ -192,10 +198,15 @@ class Simulator:
                 done_task.engines = []
                 dec = sched.on_event(self, now, tasks, trigger="completion")
             elif t_arr <= min(t_done, t_act):
-                _, idx = heapq.heappop(arrivals)
-                arrived = tasks[idx]
-                arrived.status = "ready"
-                arrived.ready_at = now
+                # one event delivers ALL tasks that became schedulable at
+                # this instant (burst arrivals coalesce into one decision)
+                arrived = []
+                while arrivals and arrivals[0][0] <= now + _EPS:
+                    _, idx = heapq.heappop(arrivals)
+                    t = tasks[idx]
+                    t.status = "ready"
+                    t.ready_at = now
+                    arrived.append(t)
                 dec = sched.on_event(self, now, tasks, trigger="arrival",
                                      arrived=arrived)
             else:

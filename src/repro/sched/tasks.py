@@ -43,31 +43,55 @@ def make_scenario(complexity: str, *, rate_hz: float = 20.0,
                   deadline_slack: float = 2.0,
                   urgent_slack: float = 1.25,
                   base_exec_estimate: float = 5e-3,
+                  burst_size: int = 1, burst_frac: float = 0.0,
                   seed: int = 0) -> Scenario:
     """Poisson stream over one complexity class (paper §4.1.2).
 
     ``deadline_slack`` multiplies a nominal execution estimate to set
     deadlines; urgent tasks get the tighter ``urgent_slack``.
+
+    ``burst_size``/``burst_frac`` turn the stream compound-Poisson: with
+    probability ``burst_frac`` an arrival event delivers ``burst_size``
+    tasks at the SAME instant (multi-tenant request fan-in — the case the
+    coalescing matcher service batches into one launch). The defaults
+    (no bursts) draw exactly the legacy RNG stream, so existing scenarios
+    are byte-identical.
     """
     rng = np.random.default_rng(seed)
     pool = workload_complexity_class(complexity)
+    bursty = burst_frac > 0.0 and burst_size > 1
     tasks: List[TaskSpec] = []
     t = 0.0
     while True:
         t += rng.exponential(1.0 / rate_hz)
         if t >= horizon:
             break
-        wl = pool[rng.integers(len(pool))]
-        urgent = bool(rng.random() < urgent_frac)
-        slack = urgent_slack if urgent else deadline_slack
-        nominal = base_exec_estimate * (wl.total_macs / 1e9 + 0.2)
-        tasks.append(TaskSpec(
-            name=wl.name, workload=wl, arrival=float(t),
-            priority=2 if urgent else 1,
-            deadline=float(t + slack * nominal + 1e-3),
-            urgent=urgent))
-    return Scenario(name=f"{complexity}-poisson", tasks=tasks,
-                    horizon=horizon)
+        count = 1
+        if bursty and rng.random() < burst_frac:
+            count = int(burst_size)
+        for _ in range(count):
+            wl = pool[rng.integers(len(pool))]
+            urgent = bool(rng.random() < urgent_frac)
+            slack = urgent_slack if urgent else deadline_slack
+            nominal = base_exec_estimate * (wl.total_macs / 1e9 + 0.2)
+            tasks.append(TaskSpec(
+                name=wl.name, workload=wl, arrival=float(t),
+                priority=2 if urgent else 1,
+                deadline=float(t + slack * nominal + 1e-3),
+                urgent=urgent))
+    name = (f"{complexity}-burst{burst_size}" if bursty
+            else f"{complexity}-poisson")
+    return Scenario(name=name, tasks=tasks, horizon=horizon)
+
+
+def make_burst_scenario(complexity: str, *, burst_size: int = 4,
+                        burst_frac: float = 0.5, **kw) -> Scenario:
+    """Compound-Poisson burst stream: a ``burst_frac`` fraction of arrival
+    events deliver ``burst_size`` simultaneous tasks (PREMA's consolidated
+    multi-tenant NPU setting). All other knobs pass through to
+    ``make_scenario``."""
+    return make_scenario(complexity, burst_size=burst_size,
+                         burst_frac=burst_frac, **kw)
 
 
 def fixed_scenario(workloads: Sequence[WorkloadGraph], *,

@@ -1,0 +1,247 @@
+"""Batched-problem matcher: ``pso.match_batch`` equivalence with
+independent calls, per-problem early exit, service request coalescing
+(submit/drain/match_many), batch padding + occupancy accounting, and
+compile-LRU eviction under many shape buckets."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import graphs, pso
+from repro.core.service import MatcherService
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = pso.PSOConfig(num_particles=24, epochs=3, inner_steps=8,
+                    early_exit=True)
+
+
+def _planted(seed, n, m, edge_prob=0.35):
+    key = jax.random.PRNGKey(seed)
+    kq, kt = jax.random.split(key)
+    q = graphs.random_dag(kq, n, edge_prob)
+    g = graphs.embed_query_in_target(kt, q, m)
+    return q, g
+
+
+def _stack_problems(pairs):
+    Qs, Gs, masks = [], [], []
+    for q, g in pairs:
+        Q, G, mask = graphs.as_device_graphs(q, g)
+        Qs.append(Q)
+        Gs.append(G)
+        masks.append(mask)
+    return jnp.stack(Qs), jnp.stack(Gs), jnp.stack(masks)
+
+
+# ---------------------------------------------------------------------------
+# pso.match_batch
+# ---------------------------------------------------------------------------
+
+def test_match_batch_equals_independent_calls():
+    """B stacked problems must return the same feasibility/fitness per
+    problem as B independent ``match`` calls with the same keys."""
+    pairs = [_planted(s, 6, 12) for s in range(4)]
+    Qb, Gb, maskb = _stack_problems(pairs)
+    keys = jnp.stack([np.asarray(jax.random.PRNGKey(100 + i))
+                      for i in range(4)])
+    outs_b = pso.match_batch(keys, Qb, Gb, maskb, CFG)
+    for b in range(4):
+        outs_1 = pso.match(jax.random.PRNGKey(100 + b),
+                           Qb[b], Gb[b], maskb[b], CFG)
+        np.testing.assert_array_equal(
+            np.asarray(outs_b["feasible"])[:, b],
+            np.asarray(outs_1["feasible"]))
+        np.testing.assert_allclose(
+            np.asarray(outs_b["fitness"])[:, b],
+            np.asarray(outs_1["fitness"]), rtol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(outs_b["f_star"])[b],
+            np.asarray(outs_1["f_star"]), rtol=1e-6)
+        assert int(np.asarray(outs_b["epochs_run"])[b]) == \
+            int(np.asarray(outs_1["epochs_run"]))
+
+
+def test_match_batch_per_problem_early_exit():
+    """An easy problem exits after its first feasible epoch even when a
+    hard (infeasible) neighbour keeps the batch running all T epochs."""
+    easy_q, easy_g = _planted(2, 6, 12)
+    hard_q, hard_g = graphs.line_graph(6), graphs.line_graph(4)
+    # pad the infeasible line problem into the easy problem's shapes
+    from repro.core.preemptible_dag import pad_problem
+    from repro.core.graphs import compatibility_mask
+    Qe, Ge, me = graphs.as_device_graphs(easy_q, easy_g)
+    mask_h = compatibility_mask(hard_q, hard_g)
+    Qh, Gh, mh = pad_problem(hard_q.adj, hard_g.adj, mask_h,
+                             Qe.shape[0], Ge.shape[0])
+    Qb = jnp.stack([Qe, jnp.asarray(Qh)])
+    Gb = jnp.stack([Ge, jnp.asarray(Gh)])
+    maskb = jnp.stack([me, jnp.asarray(mh)])
+    keys = jnp.stack([np.asarray(jax.random.PRNGKey(0)),
+                      np.asarray(jax.random.PRNGKey(1))])
+    outs = pso.match_batch(keys, Qb, Gb, maskb, CFG)
+    epochs = np.asarray(outs["epochs_run"])
+    assert epochs[0] < CFG.epochs          # easy: early exit
+    assert epochs[1] == CFG.epochs         # infeasible: full budget
+    feas = np.asarray(outs["feasible"])
+    assert feas[:, 0].any()
+    assert not feas[:, 1].any()
+
+
+def test_match_batch_warm_carry_roundtrip():
+    """Stacked warm-start carries feed back per problem."""
+    pairs = [_planted(s, 6, 12) for s in (0, 2)]
+    Qb, Gb, maskb = _stack_problems(pairs)
+    keys = jnp.stack([np.asarray(jax.random.PRNGKey(i)) for i in (5, 6)])
+    cold = pso.match_batch(keys, Qb, Gb, maskb, CFG)
+    carry = (cold["S_star"], cold["f_star"], cold["S_bar"])
+    warm = pso.match_batch(keys, Qb, Gb, maskb, CFG, carry0=carry)
+    assert (np.asarray(warm["f_star"])
+            >= np.asarray(cold["f_star"]) - 1e-6).all()
+
+
+# ---------------------------------------------------------------------------
+# MatcherService coalescing
+# ---------------------------------------------------------------------------
+
+def test_match_many_coalesces_one_launch():
+    probs = [_planted(s, 6, 12) for s in range(3)]
+    svc = MatcherService(CFG)
+    res = svc.match_many([(q, g) for q, g in probs],
+                         keys=[jax.random.PRNGKey(i) for i in range(3)])
+    assert len(res) == 3
+    for r in res:
+        assert r.coalesced and r.batch_size == 3
+        assert r.bucket == (8, 16)
+    # same latency charged once across the batch
+    assert len({r.latency_s for r in res}) == 1
+    s = svc.stats_dict()
+    assert s["batch_launches"] == 1
+    assert s["coalesced_requests"] == 3
+    assert s["batch_problems"] == 3
+    assert s["batch_slots"] == 4            # padded to class 4
+    assert s["batch_occupancy"] == pytest.approx(0.75)
+    assert s["calls"] == 3
+
+
+def test_match_many_matches_sequential_per_problem():
+    """Batched results must match sequential results problem-for-problem
+    (same found flags and identical best mappings)."""
+    probs = [_planted(s, 6, 12) for s in range(4)]
+    keys = [jax.random.PRNGKey(40 + i) for i in range(4)]
+    svc_b = MatcherService(CFG)
+    batched = svc_b.match_many([(q, g) for q, g in probs], keys=keys)
+    svc_s = MatcherService(CFG)
+    for i, (q, g) in enumerate(probs):
+        seq = svc_s.match(q, g, key=keys[i])
+        assert seq.found == batched[i].found
+        assert seq.feasible_count == batched[i].feasible_count
+        if seq.found:
+            np.testing.assert_array_equal(np.asarray(seq.mapping),
+                                          np.asarray(batched[i].mapping))
+
+
+def test_match_many_mixed_buckets_submission_order():
+    """Requests spanning two shape buckets come back in submission order,
+    grouped into one launch per bucket."""
+    qa, ga = _planted(0, 6, 12)     # bucket (8, 16)
+    qb, gb = _planted(2, 10, 24)    # bucket (16, 32)
+    qc, gc = _planted(1, 8, 16)     # bucket (8, 16)
+    svc = MatcherService(CFG)
+    res = svc.match_many([(qa, ga), (qb, gb), (qc, gc)])
+    assert [r.bucket for r in res] == [(8, 16), (16, 32), (8, 16)]
+    assert res[0].batch_size == 2 and res[2].batch_size == 2
+    assert res[1].batch_size == 1 and not res[1].coalesced
+    assert svc.stats_dict()["batch_launches"] == 2
+
+
+def test_submit_drain_warm_start_scatter():
+    """Per-problem warm carries are gathered/scattered at the batch
+    boundary: a second drain of the same problems warm-hits them all."""
+    probs = [_planted(s, 6, 12) for s in (0, 1, 2)]
+    svc = MatcherService(CFG)
+    for i, (q, g) in enumerate(probs):
+        svc.submit(q, g, workload_key=f"wl{i}")
+    cold = svc.drain()
+    assert svc.pending == 0
+    assert not any(r.warm_hit for r in cold)
+    for i, (q, g) in enumerate(probs):
+        svc.submit(q, g, workload_key=f"wl{i}")
+    warm = svc.drain()
+    assert all(r.warm_hit for r in warm)
+    for c, w in zip(cold, warm):
+        assert w.f_star >= c.f_star - 1e-6
+        assert w.epochs_run <= c.epochs_run
+    s = svc.stats_dict()
+    assert s["warm_hits"] == 3 and s["warm_misses"] == 3
+    # second drain reuses the (bucket, batch-class) executable
+    assert s["compile_cache_misses"] == 1
+    assert s["compile_cache_hits"] == 1
+
+
+def test_drain_empty_is_noop():
+    svc = MatcherService(CFG)
+    assert svc.drain() == []
+    assert svc.stats_dict()["batch_launches"] == 0
+
+
+def test_oversize_burst_splits_into_class_chunks():
+    """More requests than the largest batch class split into multiple
+    launches, all slots accounted."""
+    probs = [_planted(s, 6, 12) for s in range(5)]
+    svc = MatcherService(CFG, batch_classes=(1, 2, 4))
+    res = svc.match_many([(q, g) for q, g in probs])
+    assert len(res) == 5
+    s = svc.stats_dict()
+    assert s["batch_launches"] == 2          # 4 + 1
+    assert s["batch_problems"] == 5
+    assert s["batch_slots"] == 5             # class 4 + class 1
+    assert res[0].batch_size == 4 and res[4].batch_size == 1
+
+
+# ---------------------------------------------------------------------------
+# compile-LRU under many shape buckets
+# ---------------------------------------------------------------------------
+
+def test_lru_eviction_many_buckets_stats_consistent():
+    """Cycling more (bucket, batch-class) executables than the cache
+    holds: evicted buckets recompile, and hit/miss counters stay
+    consistent with the number of lookups."""
+    cfg = CFG
+    problems = {
+        (8, 16): _planted(0, 6, 12),
+        (16, 32): _planted(2, 10, 24),
+        (8, 32): _planted(3, 5, 26),
+    }
+    svc = MatcherService(cfg, cache_capacity=2)
+    buckets = list(problems)
+    # first pass: 3 cold compiles into a capacity-2 LRU -> 1 eviction
+    for b in buckets:
+        q, g = problems[b]
+        r = svc.match(q, g)
+        assert r.bucket == b, (r.bucket, b)
+    s = svc.stats_dict()
+    assert s["compile_cache_misses"] == 3
+    assert svc.stats.compile_evictions == 1
+    assert len(svc._compiled) == 2
+
+    # the oldest bucket was evicted -> recompile; the newest still hits
+    q, g = problems[buckets[0]]
+    r = svc.match(q, g)
+    assert not r.compile_cache_hit
+    q, g = problems[buckets[2]]
+    r = svc.match(q, g)
+    assert r.compile_cache_hit
+
+    # batched launches share the same LRU under (bucket, class) keys
+    q, g = problems[buckets[0]]
+    svc.match_many([(q, g), (q, g)])
+    s = svc.stats_dict()
+    assert len(svc._compiled) == 2
+    # 6 executable lookups: 5 single + 1 batched (a coalesced launch pays
+    # ONE lookup for its whole batch)
+    assert s["compile_cache_hits"] + s["compile_cache_misses"] == 6
+    # every miss inserts an executable; what isn't resident was evicted
+    assert svc.stats.compile_evictions == \
+        s["compile_cache_misses"] - len(svc._compiled)
+    assert s["calls"] == 7

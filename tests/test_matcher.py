@@ -90,6 +90,44 @@ def test_fitness_trace_monotone():
         assert (np.diff(trace[t]) >= -1e-5).all()
 
 
+def test_gumbel_projection_restores_diversity_after_collapse():
+    """Deterministic projection maps similar particles to few distinct
+    assignments; the Gumbel-perturbed structured projection explores
+    strictly more of the assignment space from the same swarm."""
+    q, g = _planted(10, 10, 24)
+    Q, G, mask = graphs.as_device_graphs(q, g)
+    cfg = pso.PSOConfig(num_particles=16, epochs=1, inner_steps=8,
+                        prune_mask=False)
+    carry = pso.default_carry(mask)
+
+    def distinct_projections(tau):
+        _, outs = pso.run_epoch(carry, jax.random.PRNGKey(0), Q, G, mask,
+                                cfg.replace(gumbel_tau=tau))
+        maps = np.asarray(outs["mappings"])
+        return len({m.tobytes() for m in maps})
+
+    det, gum = distinct_projections(0.0), distinct_projections(0.35)
+    assert gum > det, (det, gum)
+
+
+@pytest.mark.slow
+def test_gumbel_projection_unstalls_nonpruned_quantized_instance():
+    """Regression for the ROADMAP quantized-diversity open item: on this
+    non-pruned planted instance the deterministic projection stalls (the
+    fractional optimum beats the best integral solution and every
+    consensus-collapsed particle projects to the same near-miss), while
+    the Gumbel-perturbed projection finds the planted match."""
+    q, g = _planted(10, 10, 24)
+    cfg = pso.PSOConfig(num_particles=48, epochs=6, inner_steps=8,
+                        prune_mask=False, quantized=True)
+    key = jax.random.PRNGKey(3000)
+    det = IMMSchedMatcher(cfg).match(q, g, key=key)
+    assert not det.found          # deterministic projection stalls here
+    gum = IMMSchedMatcher(cfg.replace(gumbel_tau=0.35)).match(q, g, key=key)
+    assert gum.found
+    _check_mapping(gum.mapping, q, g)
+
+
 def test_masked_entries_never_assigned():
     q, g = _planted(6, 8, 16)
     mask = graphs.compatibility_mask(q, g)

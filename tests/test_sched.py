@@ -9,7 +9,7 @@ from repro.core import ilp, interrupts, preemptible_dag
 from repro.core.graphs import compatibility_mask
 from repro.core.pso import PSOConfig
 from repro.sched import (SimConfig, Simulator, get_scheduler, make_scenario)
-from repro.sched.tasks import fixed_scenario
+from repro.sched.tasks import fixed_scenario, make_burst_scenario
 from repro.sched.metrics import run_all, speedup_table
 from repro.workloads import get_workload
 
@@ -135,6 +135,73 @@ def test_immsched_real_matcher_mode_runs():
     r = Simulator(cfg, get_scheduler("immsched")).run(sc)
     assert r.finished == r.total
     assert r.urgent_met == r.urgent_total
+
+
+def test_make_scenario_burst_defaults_byte_identical():
+    """The burst knobs at their defaults must not perturb the RNG stream:
+    legacy scenarios stay byte-identical."""
+    a = make_scenario("simple", rate_hz=25, horizon=0.3, seed=3)
+    b = make_scenario("simple", rate_hz=25, horizon=0.3, seed=3,
+                      burst_size=1, burst_frac=0.0)
+    assert a.name == b.name and len(a.tasks) == len(b.tasks)
+    for x, y in zip(a.tasks, b.tasks):
+        assert (x.name, x.arrival, x.priority, x.deadline, x.urgent) == \
+               (y.name, y.arrival, y.priority, y.deadline, y.urgent)
+
+
+def test_make_burst_scenario_simultaneous_arrivals():
+    sc = make_burst_scenario("simple", rate_hz=40, horizon=0.3,
+                             burst_size=4, burst_frac=0.6, seed=7)
+    assert sc.name == "simple-burst4"
+    from collections import Counter
+    counts = Counter(t.arrival for t in sc.tasks)
+    assert max(counts.values()) == 4        # full bursts share one instant
+    assert min(counts.values()) == 1        # singleton events survive
+
+
+def test_burst_delivered_as_one_arrival_event():
+    """The simulator must coalesce simultaneous arrivals into ONE
+    on_event call carrying the whole burst."""
+    sc = make_burst_scenario("simple", rate_hz=40, horizon=0.3,
+                             burst_size=4, burst_frac=0.6, seed=7)
+    burst_sizes = []
+
+    class Spy:
+        def __init__(self, inner):
+            self.inner = inner
+
+        def __getattr__(self, k):
+            return getattr(self.inner, k)
+
+        def on_event(self, sim, now, tasks, trigger, arrived=None):
+            if trigger == "arrival":
+                burst_sizes.append(len(arrived))
+            return self.inner.on_event(sim, now, tasks, trigger,
+                                       arrived=arrived)
+
+    cfg = SimConfig(platform=EDGE, matcher_mode="analytic")
+    r = Simulator(cfg, Spy(get_scheduler("immsched"))).run(sc)
+    assert r.finished == r.total
+    assert sum(burst_sizes) == r.total       # every task delivered once
+    assert max(burst_sizes) == 4             # the burst came in one event
+
+
+@pytest.mark.slow
+def test_immsched_real_mode_coalesces_burst_matches():
+    """Real-matcher mode on an urgent burst: the whole burst's matchings
+    go through the service as coalesced batch launches."""
+    sc = make_burst_scenario("simple", rate_hz=30, horizon=0.25,
+                             burst_size=3, burst_frac=0.8,
+                             urgent_frac=0.7, seed=5)
+    cfg = SimConfig(platform=EDGE, matcher_mode="real",
+                    pso_cfg=PSOConfig(num_particles=32, epochs=2,
+                                      inner_steps=6),
+                    window_stages=2)
+    r = Simulator(cfg, get_scheduler("immsched")).run(sc)
+    assert r.finished == r.total
+    assert r.urgent_met == r.urgent_total
+    assert r.matcher_stats["coalesced_requests"] > 0
+    assert r.matcher_stats["batch_occupancy"] > 0.5
 
 
 def test_urgent_preemption_happens_under_load():
