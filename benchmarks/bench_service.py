@@ -72,7 +72,7 @@ def main() -> None:
     # hit the compiled executable, only the prior differs)
     svc2 = MatcherService(cfg)
     svc2.match(q, g, key=jax.random.PRNGKey(100), workload_key="w")  # compile
-    svc2._warm.clear()
+    svc2.clear_carries()
     cold2 = svc2.match(q, g, key=jax.random.PRNGKey(101), workload_key="w")
     warm2 = svc2.match(q, g, key=jax.random.PRNGKey(102), workload_key="w")
     assert not cold2.warm_hit and warm2.warm_hit

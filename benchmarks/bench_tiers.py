@@ -1,0 +1,263 @@
+"""Tiered-pipeline benchmark: mixed bursts, fragmentation churn, per-tier
+latency accounting.
+
+Three experiments, one per acceptance claim of the tiered decision
+pipeline (revalidate → similarity-rebase → swarm):
+
+  1. **Mixed warm burst** — E easy (fast-pathing) + H hard (full-epoch)
+     problems in one shape bucket, all warm. Compares the tiered
+     ``match_many`` drain against (a) E+H sequential warm ``match`` calls
+     and (b) the PR-2 *uniform* batch path (``tiered=False``: one swarm
+     launch over the whole burst, where a serial device pays the hard
+     members' epochs at full batch width). Acceptance: pipeline wall ≤
+     sequential AND < uniform, found flags identical everywhere.
+  2. **Fragmentation churn** — one workload matched against a drifting
+     free-engine set (one engine swaps per step, PREMA-style preemption
+     churn). Every drift is an exact-content warm MISS, so the
+     content-keyed baseline (``similarity=False``) re-swarms each step
+     while Tier-1 rebases serve the tiered service at revalidation cost.
+     Acceptance: tiered revalidated-rate > content-keyed baseline's.
+  3. **Simulator accounting** — `make_mixed_burst_scenario` through the
+     event simulator with the real matcher, dumping the per-tier counters
+     surfaced in ``SimResult.matcher_stats`` (and IsoSched's host-memo
+     counters for the warm-traffic baseline comparison).
+
+Emits ``BENCH_tiers.json`` and CSV rows on stdout.
+
+Usage: PYTHONPATH=src python -m benchmarks.bench_tiers
+           [--easy E] [--hard H] [--repeats N] [--churn-steps T]
+           [--smoke] [--out FILE]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import time
+
+import jax
+import numpy as np
+
+from repro.accel import EDGE
+from repro.accel.target_graph import (free_engine_graph,
+                                      free_engine_signature)
+from repro.core import graphs, preemptible_dag, pso
+from repro.core.service import MatcherService
+from repro.sched import SimConfig, Simulator, get_scheduler
+from repro.sched.metrics import pipeline_tier_rates
+from repro.sched.tasks import make_mixed_burst_scenario
+from repro.workloads import get_workload
+
+
+def _planted(seed: int, n: int, m: int):
+    key = jax.random.PRNGKey(seed)
+    kq, kt = jax.random.split(key)
+    q = graphs.random_dag(kq, n, 0.35)
+    g = graphs.embed_query_in_target(kt, q, m)
+    return q, g
+
+
+def _fastpath_problems(svc: MatcherService, want: int, seed0: int = 100):
+    """Planted problems whose stored carry re-validates on repeat (the
+    warm 'easy' traffic class); mirrors bench_batch's servable filter."""
+    probs, keys, wks = [], [], []
+    s = seed0
+    while len(probs) < want and s < seed0 + 40 * want:
+        q, g = _planted(s, 6, 12)
+        key = jax.random.PRNGKey(s)
+        wk = f"easy/{s}"
+        r = svc.match(q, g, key=key, workload_key=wk)
+        if r.found:
+            r2 = svc.match(q, g, key=jax.random.PRNGKey(s + 999),
+                           workload_key=wk)
+            if r2.tier == 0:
+                probs.append((q, g))
+                keys.append(key)
+                wks.append(wk)
+        s += 1
+    assert len(probs) == want, "not enough fast-pathing planted problems"
+    return probs, keys, wks
+
+
+def bench_mixed_burst(cfg: pso.PSOConfig, easy: int, hard: int,
+                      repeats: int):
+    svc = MatcherService(cfg, batch_classes=(1, 2, 4, max(8, easy + hard)))
+    svc_u = MatcherService(cfg, tiered=False,
+                           batch_classes=(1, 2, 4, max(8, easy + hard)))
+    eprobs, ekeys, ewks = _fastpath_problems(svc, easy)
+    # hard member: infeasible in the same (8, 16) bucket → full epochs
+    hq, hg = graphs.line_graph(6), graphs.line_graph(4)
+    probs = eprobs + [(hq, hg)] * hard
+    keys = ekeys + [jax.random.PRNGKey(900 + i) for i in range(hard)]
+    wks = ewks + [f"hard/{i}" for i in range(hard)]
+
+    # warm both services on every problem + compile their batch paths
+    for svc_x in (svc, svc_u):
+        for i, (q, g) in enumerate(probs):
+            svc_x.match(q, g, key=keys[i], workload_key=wks[i])
+        svc_x.match_many(probs, keys=keys, workload_keys=wks)
+
+    seq_lat, pipe_lat, uni_lat = [], [], []
+    seq_flags = pipe_flags = uni_flags = None
+    tiers = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        rs = [svc.match(q, g, key=keys[i], workload_key=wks[i])
+              for i, (q, g) in enumerate(probs)]
+        seq_lat.append(time.perf_counter() - t0)
+        seq_flags = [r.found for r in rs]
+
+        t0 = time.perf_counter()
+        rp = svc.match_many(probs, keys=keys, workload_keys=wks)
+        pipe_lat.append(time.perf_counter() - t0)
+        pipe_flags = [r.found for r in rp]
+        tiers = [r.tier for r in rp]
+
+        t0 = time.perf_counter()
+        ru = svc_u.match_many(probs, keys=keys, workload_keys=wks)
+        uni_lat.append(time.perf_counter() - t0)
+        uni_flags = [r.found for r in ru]
+
+    assert seq_flags == pipe_flags == uni_flags, \
+        (seq_flags, pipe_flags, uni_flags)
+    seq_med = statistics.median(seq_lat)
+    pipe_med = statistics.median(pipe_lat)
+    uni_med = statistics.median(uni_lat)
+    return {
+        "easy": easy,
+        "hard": hard,
+        "sequential_median_s": seq_med,
+        "pipeline_median_s": pipe_med,
+        "uniform_batch_median_s": uni_med,
+        "pipeline_over_sequential": pipe_med / max(seq_med, 1e-12),
+        "pipeline_over_uniform": pipe_med / max(uni_med, 1e-12),
+        "per_problem_tier": tiers,
+        "per_problem_found": pipe_flags,
+        "tier0_served": sum(1 for t in tiers if t == 0),
+        "tier2_served": sum(1 for t in tiers if t == 2),
+        "stats": svc.stats_dict(),
+        "pass": pipe_med <= seq_med and pipe_med < uni_med,
+    }
+
+
+def bench_fragmentation(cfg: pso.PSOConfig, steps: int, seed: int = 42):
+    wl = get_workload("mobilenetv2")
+    cap = EDGE.engine_tile_capacity_macs()
+    pd = preemptible_dag.build_preemptible_dag(
+        [(0, wl, 0)], tile_capacity_macs=cap, window_stages=4)
+    q = pd.graph
+
+    rng = np.random.default_rng(seed)
+    busy = set(rng.choice(EDGE.engines, 6, replace=False).tolist())
+    states = []
+    for step in range(steps):
+        if step:
+            busy.remove(next(iter(busy)))   # one victim resumes ...
+            pool = [e for e in range(EDGE.engines) if e not in busy]
+            busy.add(int(rng.choice(pool)))  # ... another gets preempted
+        free = np.array([e not in busy for e in range(EDGE.engines)])
+        states.append((free_engine_graph(EDGE, free),
+                       free_engine_signature(free)))
+
+    out = {"query_tiles": int(q.n), "steps": steps}
+    for label, sim in (("tiered", True), ("content_keyed", False)):
+        svc = MatcherService(cfg, similarity=sim)
+        tiers = []
+        for i, (tgt, sig) in enumerate(states):
+            r = svc.match(q, tgt, key=jax.random.PRNGKey(i),
+                          workload_key=(wl.name, sig))
+            tiers.append(r.tier)
+        s = svc.stats_dict()
+        out[label] = {
+            "revalidated_rate": s["revalidated_rate"],
+            "tier1_hits": s["tier1_hits"],
+            "tier2_swarms": s["tier2_checked"],
+            "exact_warm_hits": s["warm_hits"],
+            "per_step_tier": tiers,
+        }
+    out["pass"] = (out["tiered"]["revalidated_rate"]
+                   > out["content_keyed"]["revalidated_rate"])
+    return out
+
+
+def bench_simulator(cfg: pso.PSOConfig, smoke: bool):
+    sc = make_mixed_burst_scenario(
+        "simple", "simple" if smoke else "middle",
+        rate_hz=30, horizon=0.2 if smoke else 0.4,
+        burst_size=4 if smoke else 6, hard_frac=0.25, burst_frac=0.8,
+        churn_rate_hz=10, seed=7)
+    out = {"scenario": sc.name, "tasks": len(sc.tasks)}
+    sim_cfg = SimConfig(platform=EDGE, matcher_mode="real", pso_cfg=cfg,
+                        window_stages=2)
+    r = Simulator(sim_cfg, get_scheduler("immsched")).run(sc)
+    out["immsched"] = {
+        "finished": r.finished, "total": r.total,
+        "avg_sched_time_s": r.avg_sched_time,
+        "tier_rates": pipeline_tier_rates(r),
+        "matcher_stats": {k: v for k, v in r.matcher_stats.items()
+                          if not k.endswith("wall_s")},
+    }
+    ri = Simulator(SimConfig(platform=EDGE, matcher_mode="analytic"),
+                   get_scheduler("isosched")).run(sc)
+    out["isosched"] = {
+        "finished": ri.finished,
+        "avg_sched_time_s": ri.avg_sched_time,
+        "memo_stats": dict(ri.matcher_stats),
+    }
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--easy", type=int, default=6)
+    ap.add_argument("--hard", type=int, default=2)
+    ap.add_argument("--repeats", type=int, default=12)
+    ap.add_argument("--churn-steps", type=int, default=24)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI config: small swarm, short runs")
+    ap.add_argument("--out", default="BENCH_tiers.json")
+    args = ap.parse_args()
+
+    if args.smoke:
+        cfg = pso.PSOConfig(num_particles=8, epochs=2, inner_steps=4)
+        easy, hard, repeats, steps = 3, 1, 2, 8
+    else:
+        # the simulator's production window config (SimConfig.pso_cfg)
+        cfg = pso.PSOConfig(num_particles=32, epochs=2, inner_steps=8)
+        easy, hard = args.easy, args.hard
+        repeats, steps = max(args.repeats, 2), args.churn_steps
+
+    mixed = bench_mixed_burst(cfg, easy, hard, repeats)
+    frag = bench_fragmentation(cfg, steps)
+    sim = bench_simulator(cfg, args.smoke)
+
+    result = {
+        "smoke": bool(args.smoke),
+        "pso_cfg": {"num_particles": cfg.num_particles,
+                    "epochs": cfg.epochs, "inner_steps": cfg.inner_steps},
+        "mixed_burst": mixed,
+        "fragmentation": frag,
+        "simulator": sim,
+    }
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+
+    print("name,us_per_call,derived")
+    print(f"tiers_seq_{easy + hard}_warm,"
+          f"{mixed['sequential_median_s'] * 1e6:.1f},"
+          f"{sum(mixed['per_problem_found'])}/{easy + hard}_found")
+    print(f"tiers_pipeline_{easy + hard}_warm,"
+          f"{mixed['pipeline_median_s'] * 1e6:.1f},"
+          f"vs_seq={mixed['pipeline_over_sequential']:.3f}")
+    print(f"tiers_uniform_{easy + hard}_warm,"
+          f"{mixed['uniform_batch_median_s'] * 1e6:.1f},"
+          f"vs_uniform={mixed['pipeline_over_uniform']:.3f}")
+    print(f"tiers_frag_revalidated_rate,0.0,"
+          f"tiered={frag['tiered']['revalidated_rate']:.3f}"
+          f"_content={frag['content_keyed']['revalidated_rate']:.3f}")
+    ok = mixed["pass"] and frag["pass"]
+    print(f"tiers_acceptance,0.0,{'PASS' if ok else 'FAIL'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -104,6 +104,29 @@ class CostModel:
              + consensus_bytes * self.avg_hops * self.e_noc_byte_hop)
         return t_compute + t_noc, e
 
+    def sched_immsched_revalidate(self, n: int, m: int,
+                                  engines_for_sched: int = 1,
+                                  batch: int = 1):
+        """Tier-0/1 pipeline decision: carry rebase + ONE structured
+        projection + one feasibility/fitness verification on the
+        accelerator — no swarm epochs. A batch of B revalidations spreads
+        across the scheduling engines (the problems are independent), so
+        latency grows with ceil(B/engines) while energy scales with B;
+        only the verified mapping (n·m bytes) ships over the NoC."""
+        p = self.platform
+        project = float(n) * n * m                 # n masked-argmax sweeps
+        verify = float(n) * m * m + float(n) * n * m   # M G Mᵀ ⊇ Q check
+        macs_per = project + verify
+        rate = p.macs_per_engine * p.clock_hz * self.engine_util_matcher
+        eng = max(engines_for_sched, 1)
+        rounds = (max(batch, 1) + eng - 1) // eng
+        t_compute = rounds * macs_per / rate
+        result_bytes = max(batch, 1) * n * m
+        t_noc = result_bytes * self.avg_hops / p.noc_link_bw_bytes
+        e = (max(batch, 1) * macs_per * self.e_mac_int8
+             + result_bytes * self.avg_hops * self.e_noc_byte_hop)
+        return t_compute + t_noc, e
+
     def sched_serial_cpu(self, mac_ops: float, nodes_visited: int):
         """IsoSched-like: serial subgraph matching on the host CPU
         (float32 ops, branchy backtracking)."""

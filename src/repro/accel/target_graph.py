@@ -54,3 +54,14 @@ def free_engine_signature(free: Sequence[bool]) -> bytes:
     warm-start entries to a (workload, platform-state) class.
     """
     return np.packbits(np.asarray(free, dtype=bool)).tobytes()
+
+
+def signature_bits(sig: bytes) -> np.ndarray:
+    """Unpacked bit vector of a ``free_engine_signature``.
+
+    The single decode point for every consumer that compares platform
+    states by engine-set overlap (the service's similarity-keyed carry
+    store and the scheduler's analytic tier predictor must agree on the
+    packing), so a change to the signature encoding lands in one place.
+    """
+    return np.unpackbits(np.frombuffer(sig, dtype=np.uint8))

@@ -282,6 +282,46 @@ def build_distributed_match_batch(Q_shape: Tuple[int, int], mesh: Mesh,
     return jax.jit(fn)
 
 
+def build_distributed_revalidate_batch(Q_shape: Tuple[int, int], mesh: Mesh,
+                                       cfg: pso.PSOConfig,
+                                       axis_names: Sequence[str] = ("data",),
+                                       batch: int = 1):
+    """Returns a jit'd ``revalidate(Qb, Gb, maskb, carry0)`` running the
+    tiered pipeline's cheap stage (carry rebase + one structured
+    projection + feasibility per problem) on the mesh.
+
+    Revalidation has no swarm and no collectives, so the two regimes are
+    both embarrassingly parallel:
+
+      * **problem-axis sharding** (B ≥ devices and divisible): each device
+        revalidates B/D carries locally;
+      * **replicated fallback** (small B): every device computes the whole
+        (tiny) batch — one projection per problem is far below the cost of
+        re-sharding, and the replicated outputs keep the calling
+        convention identical.
+    """
+    axis_names = tuple(axis_names)
+    num_shards = int(np.prod([mesh.shape[a] for a in axis_names]))
+    shard_map = get_shard_map()
+
+    def local_reval(Qb, Gb, maskb, carry0):
+        return pso._revalidate_batch_body(Qb, Gb, maskb, cfg, carry0)
+
+    if batch >= num_shards and batch % num_shards == 0:
+        shard_b = P(axis_names)
+        in_specs = (shard_b, shard_b, shard_b,
+                    (shard_b, shard_b, shard_b))
+        out_specs = dict(mapping=shard_b, ok=shard_b, ok_rebase=shard_b,
+                         fitness=shard_b, S_star=shard_b, S_bar=shard_b)
+    else:
+        in_specs = (P(), P(), P(), (P(), P(), P()))
+        out_specs = dict(mapping=P(), ok=P(), ok_rebase=P(), fitness=P(),
+                         S_star=P(), S_bar=P())
+    fn = shard_map(local_reval, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs)
+    return jax.jit(fn)
+
+
 class IMMSchedMatcher:
     """High-level matcher API.
 

@@ -250,6 +250,106 @@ def carry_fast_path(carry0, Q, G, mask, cfg: PSOConfig):
     return M_c, ok
 
 
+def rebase_carry(carry, mask: jax.Array):
+    """Project a stored controller carry onto a (possibly different)
+    compatibility mask.
+
+    The similarity-keyed carry store (service Tier 1) reuses the carry of
+    the *nearest* platform state when the free-engine set has drifted:
+    S* and S̄ are masked to the new compatibility mask and row-renormalized
+    (rows whose support vanished fall back to uniform over the new mask).
+    Row renormalization is a positive per-row scale, so for an *identical*
+    mask the rebase is exactly the identity on any swarm-produced carry —
+    Tier 0 and Tier 1 can therefore share one revalidation kernel.
+
+    f* is passed through untouched: it is only ever used as a "this carry
+    holds a real decision" gate (> -inf); fitness values are not
+    comparable across platform states, so the caller decides what f to
+    store after revalidation (see ``revalidate_carry``).
+    """
+    S_star, f_star, S_bar = carry
+    maskf = mask.astype(jnp.float32)
+    mask_rows = maskf.sum(-1, keepdims=True)
+    uniform = maskf / jnp.maximum(mask_rows, 1.0)
+
+    def onto(S):
+        S = S.astype(jnp.float32) * maskf
+        row = S.sum(-1, keepdims=True)
+        return jnp.where(row > 1e-9, S / jnp.maximum(row, 1e-9), uniform)
+
+    return onto(S_star), f_star, onto(S_bar)
+
+
+def revalidate_carry(carry0, Q, G, mask, cfg: PSOConfig):
+    """Tier-0/1 decision kernel: rebase + ONE masked structured projection.
+
+    The batched pipeline's cheap stage: the carry is rebased onto this
+    problem's (pruned) mask, its S* is projected once, and the projection
+    is feasibility-checked against the *actual* Q/G — a rebased carry can
+    therefore never yield an infeasible mapping marked found. Also
+    computes the projected mapping's own fitness ``f_c`` on THIS problem
+    (the stored f* is not transferable across platform states), which the
+    service stores back on a Tier-1 hit.
+
+    Returns ``dict(mapping, ok, ok_rebase, fitness, S_star, S_bar)``:
+    ``ok`` is the Tier-0 verdict (carried-f* gate, bit-compatible with
+    ``carry_fast_path``), ``ok_rebase`` the stricter Tier-1 verdict
+    (also requires the projection's own fitness to clear the bound), and
+    S_star/S_bar are the rebased controller state (f* intentionally
+    omitted: hits store ``fitness``, swarm seeds reset it to -inf).
+    """
+    S_rb, f_star0, S_bar_rb = rebase_carry(carry0, mask)
+    M_c = ref.structured_project(S_rb, Q, G, mask).astype(jnp.uint8)
+    f_c = _fitness(M_c.astype(jnp.float32)[None], Q, G, cfg)[0]
+    # ``ok`` gates on the CARRIED f* exactly like the in-kernel
+    # ``carry_fast_path``, so Tier-0 batch revalidation and a single
+    # warm ``match`` agree at any ``early_exit_fitness`` threshold.
+    ok = (ref.is_feasible(M_c, Q, G)
+          & (f_star0 > jnp.float32(-jnp.inf))
+          & (f_star0 >= cfg.early_exit_fitness))
+    # Tier 1 must not trust a fitness measured on a different platform
+    # state: a REBASED carry additionally clears the bound with the
+    # projection's own fitness on THIS problem.
+    ok_rebase = ok & (f_c >= cfg.early_exit_fitness)
+    return dict(mapping=M_c, ok=ok, ok_rebase=ok_rebase, fitness=f_c,
+                S_star=S_rb, S_bar=S_bar_rb)
+
+
+def _revalidate_batch_body(Qb: jax.Array, Gb: jax.Array, maskb: jax.Array,
+                           cfg: PSOConfig, carry0):
+    """Batched revalidation: B carries re-validated in one launch, no
+    epochs — one projection + feasibility check per problem. Masks are
+    pre-pruned exactly as ``_match_batch_body`` does, so the projection
+    sees the same candidate sets the swarm that produced the carry saw."""
+    if cfg.prune_mask:
+        maskb = jax.vmap(
+            lambda mk, Q, G: ref.prune_mask_fixpoint(mk, Q, G,
+                                                     cfg.prune_iters)
+        )(maskb, Qb, Gb).astype(maskb.dtype)
+    return jax.vmap(
+        lambda c, Q, G, mk: revalidate_carry(c, Q, G, mk, cfg)
+    )(carry0, Qb, Gb, maskb)
+
+
+_revalidate_batch_impl = functools.partial(
+    jax.jit, static_argnames=("cfg",))(_revalidate_batch_body)
+
+
+def revalidate_batch(Qb: jax.Array, Gb: jax.Array, maskb: jax.Array,
+                     cfg: PSOConfig, carry0):
+    """Tier-0 pipeline entry point: batch-revalidate B stored carries.
+
+    Inputs are stacked on a leading problem axis like ``match_batch``;
+    ``carry0`` holds the per-problem carries to re-validate (exact warm
+    carries for Tier 0, nearest-neighbour carries for Tier 1 — the rebase
+    inside makes both cases one kernel). Returns a pytree of
+    ``mapping`` (B, n, m) uint8, ``ok`` (B,) bool, ``fitness`` (B,) f32
+    and the rebased ``S_star``/``S_bar``. Cost is one jit dispatch and
+    one projection per problem — no swarm, no epochs.
+    """
+    return _revalidate_batch_impl(Qb, Gb, maskb, cfg, carry0)
+
+
 def _skip_epoch_outs(carry, n, m, cfg: PSOConfig):
     """Shape-matched placeholder outputs for an early-exited epoch."""
     _, f_star, _ = carry

@@ -1,4 +1,4 @@
-"""Online matcher service: warm-started, compile-cached subgraph matching.
+"""Online matcher service: a tiered revalidate → rebase → swarm pipeline.
 
 ``pso.match`` alone is a batch API: every new (n, m) query/target shape
 triggers an XLA recompile (seconds) and every call restarts the swarm from
@@ -13,29 +13,47 @@ when tasks arrive unpredictably at microsecond granularity. The
   * **Bounded compile LRU** — one jit wrapper per (bucket, config), held in
     an LRU of ``cache_capacity`` entries; evicting an entry drops its
     executable. Repeat arrivals never recompile.
-  * **Warm starts** — the final global-controller state
-    ``(S*, f*, S̄)`` of each call is remembered under a
-    (workload, platform-state) key and fed back as ``carry0`` on the next
-    arrival of the same problem, so the swarm resumes from the previous
-    consensus instead of the uniform prior.
+  * **Warm starts** — the final global-controller state ``(S*, f*, S̄)`` of
+    each call is remembered in a two-level :class:`CarryStore`: an *exact*
+    content-keyed LRU plus a *similarity* index keyed by
+    (query digest, bucket, free-engine signature) for platform-state
+    drift.
   * **Early exit** — the service enables ``cfg.early_exit`` so easy
     matches stop scanning epochs once a feasible mapping clears the
     fitness bound (1 epoch instead of T on planted instances).
-  * **Request coalescing** — concurrent arrivals queue via ``submit`` and
-    ``drain`` flushes every same-bucket request in one *batched* launch
-    (``pso.match_batch``): K problems in an event window pay one jit
-    dispatch and one swarm warm-up instead of K. Batch size is padded to
-    a small set of classes (``batch_classes``, default 1/2/4/8) that
-    joins the compile-cache key, so the executable set stays bounded;
-    per-problem warm-start carries are gathered before and scattered
-    after the launch. Per-problem early exit keeps each problem's
-    *results* and epoch accounting identical to a solo call, but the
-    launch's wall time is that of its hardest member — every request in
-    the batch is charged the same ``latency_s`` (coalesce warm/servable
-    traffic; a mixed cold burst can be slower than sequential).
 
-Statistics for all four mechanisms are exported via ``stats`` /
-``stats_dict()`` and surfaced by ``sched.metrics``.
+**The tiered decision pipeline.** ``drain`` flushes every same-bucket
+request through three stages, so a mixed easy/hard burst costs one cheap
+revalidation launch plus a swarm sized to the hard subset — strictly no
+worse than sequential, and far better than the uniform batch that pays
+max-epochs × B whenever one hard problem rides in a burst of easy ones:
+
+  * **Tier 0 — batched revalidation.** All requests with a stored exact
+    carry are re-validated in ONE ``pso.revalidate_batch`` launch: one
+    structured projection + feasibility check per problem, no epochs.
+    Hits are served immediately at revalidation cost.
+  * **Tier 1 — similarity rebase.** Tier-0 misses (and cold requests)
+    whose workload matches a *similar* platform state — same query
+    digest, nearest free-engine set by bitmask overlap — are re-run
+    through the same revalidation kernel with the neighbour's carry,
+    which ``pso.rebase_carry`` projects onto the new compatibility mask.
+    A hit stores the rebased carry under this problem's exact key (next
+    arrival is a Tier-0 hit); the verified mapping is feasibility-checked
+    against the actual problem, so a rebased carry can never yield an
+    infeasible mapping marked found.
+  * **Tier 2 — swarm.** Only the residual misses launch the full batched
+    swarm (``pso.match_batch``), warm-seeded with their failed exact
+    carry or the rebased neighbour consensus (f* reset to -inf: fitness
+    is not transferable across platform states, direction is).
+
+Batch launches are padded to a small set of classes (``batch_classes``)
+that joins the compile-cache key; pad slots are filled with a *trivial
+pre-finished problem* whose carry validates in epoch 0, so padding never
+re-burns a real problem's epoch budget (its only cost is the slot width).
+
+Per-tier statistics (launches / problems checked / hits / wall time) are
+exported via ``stats`` / ``stats_dict()`` and surfaced by
+``sched.metrics`` through ``SimResult.matcher_stats``.
 """
 from __future__ import annotations
 
@@ -49,11 +67,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.accel.target_graph import signature_bits
 from repro.core import pso
 from repro.core.graphs import (Graph, compatibility_mask,
                                topological_relabel)
 from repro.core.matcher import (MatchResult, build_distributed_match,
                                 build_distributed_match_batch,
+                                build_distributed_revalidate_batch,
                                 collect_batch_results, collect_result)
 from repro.core.preemptible_dag import pad_problem
 
@@ -76,22 +96,44 @@ def shape_bucket(n: int, m: int, n_multiple: int = 8,
 
 
 @dataclasses.dataclass
+class TierStats:
+    """Counters for one pipeline stage."""
+    launches: int = 0                # jit dispatches this tier issued
+    checked: int = 0                 # real problems examined
+    hits: int = 0                    # requests served by this tier
+    wall_s: float = 0.0              # wall time spent in this tier
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(self.checked, 1)
+
+
+@dataclasses.dataclass
 class ServiceStats:
     calls: int = 0
     compile_cache_hits: int = 0      # bucket already had an executable
     compile_cache_misses: int = 0    # new bucket → jit compile
     compile_evictions: int = 0
-    warm_hits: int = 0               # carry0 reused from a previous call
+    warm_hits: int = 0               # exact carry found for the call
     warm_misses: int = 0
     warm_evictions: int = 0
     epochs_run: int = 0              # total epochs actually executed
     epochs_budgeted: int = 0         # cfg.epochs × calls
     found: int = 0
-    batch_launches: int = 0          # batched executions dispatched
+    batch_launches: int = 0          # swarm (Tier-2) batch executions
     coalesced_requests: int = 0      # requests served in a shared launch
-    batch_problems: int = 0          # real problems through the batch path
-    batch_slots: int = 0             # padded batch slots launched
-    carry_fastpath_hits: int = 0     # warm carries re-validated, 0 epochs
+    batch_problems: int = 0          # real problems through the swarm path
+    batch_slots: int = 0             # padded swarm batch slots launched
+    carry_fastpath_hits: int = 0     # requests served by revalidation only
+                                     # (0 epochs: Tier 0, Tier 1, or the
+                                     # in-kernel fast path)
+    pad_slots_frozen: int = 0        # pad slots pre-finished from epoch 0
+    sim_lookups: int = 0             # similarity-store nearest() queries
+    sim_neighbor_hits: int = 0       # queries that found a neighbour carry
+    sim_evictions: int = 0
+    tier0: TierStats = dataclasses.field(default_factory=TierStats)
+    tier1: TierStats = dataclasses.field(default_factory=TierStats)
+    tier2: TierStats = dataclasses.field(default_factory=TierStats)
 
     @property
     def epochs_saved(self) -> int:
@@ -106,9 +148,19 @@ class ServiceStats:
         return self.warm_hits / max(self.calls, 1)
 
     @property
+    def revalidated_rate(self) -> float:
+        """Fraction of calls served without any swarm epoch (all tiers)."""
+        return self.carry_fastpath_hits / max(self.calls, 1)
+
+    @property
     def batch_occupancy(self) -> float:
-        """Real problems per launched batch slot (1.0 = no padding waste)."""
-        return self.batch_problems / max(self.batch_slots, 1)
+        """Real problems per launched swarm slot (1.0 = no padding waste).
+
+        Vacuously 1.0 when the pipeline served everything without a
+        swarm launch — zero launches waste zero pad slots."""
+        if self.batch_slots == 0:
+            return 1.0
+        return self.batch_problems / self.batch_slots
 
 
 @dataclasses.dataclass
@@ -116,9 +168,12 @@ class ServiceMatchResult(MatchResult):
     bucket: Tuple[int, int] = (0, 0)
     compile_cache_hit: bool = False
     warm_hit: bool = False
-    latency_s: float = 0.0           # launch wall time (shared by a batch)
-    batch_size: int = 1              # real problems in the launch
+    latency_s: float = 0.0           # wall time of the launches that
+                                     # served this request
+    batch_size: int = 1              # real problems in the serving launch
     coalesced: bool = False          # served together with other requests
+    tier: int = 2                    # pipeline stage that served it:
+                                     # 0 revalidate, 1 rebase, 2 swarm
 
 
 @dataclasses.dataclass
@@ -133,6 +188,114 @@ class _PendingRequest:
     Qp: np.ndarray
     Gp: np.ndarray
     maskp: np.ndarray
+    engine_sig: Optional[bytes] = None   # free-engine bitmask (Tier-1 key)
+    qdigest: str = ""                    # query-content digest (Tier-1 key)
+    cdigest: str = ""                    # full-content digest (Tier-0 key)
+
+
+@dataclasses.dataclass(eq=False)
+class _PipelineItem:
+    """One request flowing through the tiers of a bucket-group pipeline."""
+    req: _PendingRequest
+    ticket: int
+    warm_key: Tuple
+    carry: Optional[tuple]           # exact stored carry (Tier-0 input)
+    warm_hit: bool
+    seed: Optional[tuple] = None     # rebased neighbour carry (Tier-2 seed)
+    t0: float = 0.0                  # pipeline intake timestamp
+    latency_s: float = 0.0           # intake → end of the serving launch
+    result: Optional[ServiceMatchResult] = None
+
+
+class CarryStore:
+    """Two-level warm-start store for the tiered pipeline.
+
+    * **exact** — LRU of full content keys (workload key + shapes + a
+      digest of Qp/Gp/maskp): a hit means *this exact problem* was solved
+      before; its carry feeds Tier 0.
+    * **similarity** — LRU keyed by ``(query digest, bucket, engine
+      signature)``: entries describe *which platform state* a carry was
+      produced on. ``nearest`` returns the stored carry whose free-engine
+      bitmask overlaps the query's the most (ties go to the most recently
+      stored), feeding Tier 1 rebases under fragmentation drift.
+    """
+
+    def __init__(self, capacity: int, sim_capacity: int,
+                 stats: ServiceStats):
+        self.capacity = max(int(capacity), 1)
+        self.sim_capacity = max(int(sim_capacity), 1)
+        self.stats = stats
+        self._exact: "OrderedDict[Tuple, tuple]" = OrderedDict()
+        self._sim: "OrderedDict[Tuple, Tuple[np.ndarray, tuple]]" = \
+            OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._exact)
+
+    @property
+    def sim_entries(self) -> int:
+        return len(self._sim)
+
+    def clear(self) -> None:
+        self._exact.clear()
+        self._sim.clear()
+
+    # -- exact tier --------------------------------------------------------
+
+    def get(self, key) -> Tuple[Optional[tuple], bool]:
+        if key in self._exact:
+            self._exact.move_to_end(key)
+            self.stats.warm_hits += 1
+            return self._exact[key], True
+        self.stats.warm_misses += 1
+        return None, False
+
+    def put(self, key, carry) -> None:
+        self._exact[key] = carry
+        while len(self._exact) > self.capacity:
+            self._exact.popitem(last=False)
+            self.stats.warm_evictions += 1
+
+    # -- similarity tier ---------------------------------------------------
+
+    @staticmethod
+    def _bits(sig: bytes) -> np.ndarray:
+        return signature_bits(sig)
+
+    def put_similar(self, qdigest: str, bucket: Tuple[int, int],
+                    sig: bytes, carry) -> None:
+        self._sim[(qdigest, bucket, sig)] = (self._bits(sig), carry)
+        self._sim.move_to_end((qdigest, bucket, sig))
+        while len(self._sim) > self.sim_capacity:
+            self._sim.popitem(last=False)
+            self.stats.sim_evictions += 1
+
+    def nearest(self, qdigest: str, bucket: Tuple[int, int], sig: bytes,
+                exclude_sig: Optional[bytes] = None
+                ) -> Optional[Tuple[bytes, tuple]]:
+        """Stored carry of the platform state nearest to ``sig``.
+
+        Nearest = max popcount of the AND of the free-engine bitmasks;
+        ties broken toward the smaller symmetric difference, then toward
+        the most recently stored entry. Returns ``(stored_sig, carry)``
+        or None when no same-workload entry overlaps at all.
+        """
+        bits = self._bits(sig)
+        best = None
+        best_score = (0, float("-inf"))
+        for (qd, bk, s), (b, carry) in self._sim.items():
+            if qd != qdigest or bk != bucket or s == exclude_sig:
+                continue
+            if b.shape != bits.shape:
+                continue
+            overlap = int((b & bits).sum())
+            if overlap <= 0:
+                continue
+            score = (overlap, -int((b ^ bits).sum()))
+            if score >= best_score:     # >=: most recent wins ties
+                best_score = score
+                best = (s, carry)
+        return best
 
 
 class MatcherService:
@@ -140,6 +303,10 @@ class MatcherService:
 
     Single-device by default; pass ``mesh`` + ``axis_names`` to run each
     bucket's executable as the collective-fused distributed matcher.
+    ``tiered=False`` disables the staged pipeline and restores the
+    uniform one-swarm-launch-per-batch drain (the PR-2 baseline);
+    ``similarity=False`` keeps the pipeline but disables Tier-1 rebases
+    (the content-keyed baseline).
     """
 
     def __init__(self, cfg: Optional[pso.PSOConfig] = None, *,
@@ -147,7 +314,9 @@ class MatcherService:
                  cache_capacity: int = 16, warm_capacity: int = 256,
                  warm_start: bool = True, early_exit: bool = True,
                  n_multiple: int = 8, m_multiple: int = 16,
-                 batch_classes: Sequence[int] = (1, 2, 4, 8)):
+                 batch_classes: Sequence[int] = (1, 2, 4, 8),
+                 tiered: bool = True, similarity: bool = True,
+                 sim_capacity: int = 128):
         cfg = cfg or pso.PSOConfig()
         if early_exit and not cfg.early_exit:
             cfg = cfg.replace(early_exit=True)
@@ -155,16 +324,25 @@ class MatcherService:
         self.mesh = mesh
         self.axis_names = tuple(axis_names)
         self.cache_capacity = max(int(cache_capacity), 1)
-        self.warm_capacity = max(int(warm_capacity), 1)
         self.warm_start = warm_start
         self.n_multiple = n_multiple
         self.m_multiple = m_multiple
         self.batch_classes = tuple(sorted(set(int(b) for b in batch_classes)))
         assert self.batch_classes and self.batch_classes[0] >= 1
+        self.tiered = tiered
+        self.similarity = similarity
         self.stats = ServiceStats()
+        self._carries = CarryStore(warm_capacity, sim_capacity, self.stats)
         self._compiled: "OrderedDict[Tuple, object]" = OrderedDict()
-        self._warm: "OrderedDict[Tuple, tuple]" = OrderedDict()
         self._pending: List[_PendingRequest] = []
+
+    @property
+    def warm_capacity(self) -> int:
+        return self._carries.capacity
+
+    def clear_carries(self) -> None:
+        """Drop every stored warm-start carry (exact and similarity)."""
+        self._carries.clear()
 
     # -- caches ------------------------------------------------------------
 
@@ -200,7 +378,7 @@ class MatcherService:
         return self._cache_put(bucket, fn)
 
     def _executable_batch(self, bucket: Tuple[int, int], bclass: int):
-        """One executable per (shape bucket, padded batch class)."""
+        """One swarm executable per (shape bucket, padded batch class)."""
         cache_key = (bucket, bclass)
         fn = self._cache_get(cache_key)
         if fn is not None:
@@ -219,6 +397,26 @@ class MatcherService:
                                                self.axis_names, bclass)
         return self._cache_put(cache_key, fn)
 
+    def _executable_reval(self, bucket: Tuple[int, int], bclass: int):
+        """Tier-0/1 revalidation executable (no epochs, no keys)."""
+        cache_key = (bucket, bclass, "reval")
+        fn = self._cache_get(cache_key)
+        if fn is not None:
+            return fn
+        self.stats.compile_cache_misses += 1
+        if self.mesh is None:
+            cfg = self.cfg
+
+            def fn(Qb, Gb, maskb, carry0, _cfg=cfg):
+                return pso._revalidate_batch_body(Qb, Gb, maskb, _cfg,
+                                                  carry0)
+
+            fn = jax.jit(fn)
+        else:
+            fn = build_distributed_revalidate_batch(
+                bucket, self.mesh, self.cfg, self.axis_names, bclass)
+        return self._cache_put(cache_key, fn)
+
     def _batch_class(self, k: int) -> int:
         """Smallest padded batch class holding k problems."""
         for c in self.batch_classes:
@@ -226,75 +424,133 @@ class MatcherService:
                 return c
         return self.batch_classes[-1]
 
-    def _warm_key(self, workload_key, Qp, Gp, maskp) -> Tuple:
-        """Warm starts are only valid for the *same* problem (f* values are
-        not comparable across different Q/G), so the key always includes a
-        content digest; ``workload_key`` additionally scopes entries to the
-        caller's (workload, platform-state) naming."""
-        h = hashlib.sha1()
-        h.update(np.ascontiguousarray(Qp).tobytes())
-        h.update(np.ascontiguousarray(Gp).tobytes())
-        h.update(np.ascontiguousarray(maskp).tobytes())
-        return (workload_key, Qp.shape[0], Gp.shape[0], h.hexdigest())
+    @staticmethod
+    def _warm_key(req: _PendingRequest) -> Tuple:
+        """Exact warm starts are only valid for the *same* problem (f*
+        values are not comparable across different Q/G), so the key always
+        includes the content digest ``_prepare`` computed; the request's
+        ``workload_key`` additionally scopes entries to the caller's
+        (workload, platform-state) naming."""
+        return (req.workload_key, req.Qp.shape[0], req.Gp.shape[0],
+                req.cdigest)
 
     def _get_carry(self, warm_key):
-        if self.warm_start and warm_key in self._warm:
-            self._warm.move_to_end(warm_key)
-            self.stats.warm_hits += 1
-            return self._warm[warm_key], True
-        self.stats.warm_misses += 1
-        return None, False
+        if not self.warm_start:
+            self.stats.warm_misses += 1
+            return None, False
+        return self._carries.get(warm_key)
 
     def _put_carry(self, warm_key, carry):
-        if not self.warm_start:
-            return
-        self._warm[warm_key] = carry
-        while len(self._warm) > self.warm_capacity:
-            self._warm.popitem(last=False)
-            self.stats.warm_evictions += 1
+        if self.warm_start:
+            self._carries.put(warm_key, carry)
+
+    def _store_result_carries(self, req: _PendingRequest, warm_key,
+                              res: MatchResult) -> None:
+        """Store a fresh carry under the exact key, and — when the call
+        produced a served decision on a known platform state — under the
+        similarity key too, so future drifted states can rebase it."""
+        self._put_carry(warm_key, res.carry)
+        if (self.warm_start and self.similarity and res.found
+                and req.engine_sig is not None):
+            self._carries.put_similar(req.qdigest, req.bucket,
+                                      req.engine_sig, res.carry)
 
     # -- matching ----------------------------------------------------------
 
-    def _prepare(self, query: Graph, target: Graph, key, workload_key
-                 ) -> _PendingRequest:
+    def _prepare(self, query: Graph, target: Graph, key, workload_key,
+                 engine_sig: Optional[bytes] = None) -> _PendingRequest:
         """Relabel, bucket and pad a problem on the host — the jit call
-        uploads Qp/Gp/maskp once; no device→host→device round trip."""
+        uploads Qp/Gp/maskp once; no device→host→device round trip.
+
+        ``engine_sig`` (the free-engine bitmask, see
+        ``accel.target_graph.free_engine_signature``) keys the similarity
+        store; when omitted it is recovered from a ``(name, sig)``-style
+        ``workload_key`` whose last element is bytes — the scheduler's
+        existing naming convention."""
         if key is None:
             key = jax.random.PRNGKey(0)
+        if engine_sig is None and isinstance(workload_key, tuple) \
+                and workload_key and isinstance(workload_key[-1], bytes):
+            engine_sig = workload_key[-1]
         q, order = topological_relabel(query)
         n, m = q.n, target.n
         mask = compatibility_mask(q, target)
         bucket = shape_bucket(n, m, self.n_multiple, self.m_multiple)
         Qp, Gp, maskp = pad_problem(q.adj, target.adj, mask, *bucket)
+        # one hashing pass yields both keys: the query-only digest (the
+        # similarity key) is a prefix state of the full content digest
+        # (the exact warm key)
+        h = hashlib.sha1(np.ascontiguousarray(Qp).tobytes())
+        qdigest = h.hexdigest()
+        h.update(np.ascontiguousarray(Gp).tobytes())
+        h.update(np.ascontiguousarray(maskp).tobytes())
         return _PendingRequest(key=key, workload_key=workload_key,
                                order=order, crop=(n, m), bucket=bucket,
-                               Qp=Qp, Gp=Gp, maskp=maskp)
+                               Qp=Qp, Gp=Gp, maskp=maskp,
+                               engine_sig=engine_sig, qdigest=qdigest,
+                               cdigest=h.hexdigest())
+
+    def _tiers_active(self) -> bool:
+        """Tier 0/1 only exist when the kernel fast path they batch is on
+        (otherwise serving at 0 epochs would change semantics)."""
+        return (self.tiered and self.warm_start
+                and self.cfg.early_exit and self.cfg.carry_fastpath)
 
     def match(self, query: Graph, target: Graph,
               key: Optional[jax.Array] = None,
-              workload_key=None) -> ServiceMatchResult:
+              workload_key=None,
+              engine_sig: Optional[bytes] = None) -> ServiceMatchResult:
         """Match ``query`` onto ``target`` through the service caches.
 
         ``workload_key`` names the (workload, platform-state) class for
         warm-start scoping — e.g. ``(task_name, free_engine_signature)``.
         Results are exactly the unpadded equivalent of a direct
-        ``pso.match`` on the same problem.
+        ``pso.match`` on the same problem. A single call serves warm
+        repeats through the in-kernel carry fast path (Tier 0, free
+        inside the swarm launch) and attempts a Tier-1 rebase on an
+        exact-carry MISS with a similar stored platform state. Unlike
+        ``drain``, a failed exact carry goes straight to the swarm —
+        probing the similarity store behind it would add a second
+        dispatch to every warm single call; batch that traffic through
+        ``submit``/``drain`` to get the full pipeline.
         """
         t0 = time.perf_counter()
         self.stats.calls += 1
-        req = self._prepare(query, target, key, workload_key)
+        self.stats.epochs_budgeted += self.cfg.epochs
+        req = self._prepare(query, target, key, workload_key, engine_sig)
         key, bucket = req.key, req.bucket
         order, (n, m) = req.order, req.crop
         Qp, Gp, maskp = req.Qp, req.Gp, req.maskp
+
+        warm_key = self._warm_key(req)
+        carry0, warm_hit = self._get_carry(warm_key)
+        if carry0 is not None:
+            self.stats.tier0.checked += 1
+
+        # Tier 1 (single-call path): exact miss, but a similar platform
+        # state is stored — revalidate its rebased carry before swarming.
+        seed = None
+        if carry0 is None and self._tiers_active() and self.similarity \
+                and req.engine_sig is not None:
+            item = _PipelineItem(req=req, ticket=0, warm_key=warm_key,
+                                 carry=None, warm_hit=False, t0=t0)
+            nb = self._lookup_neighbor(item)
+            if nb is not None:
+                residual = self._launch_revalidate(bucket, [item], [nb],
+                                                   tier=1)
+                if not residual:
+                    res = item.result
+                    res.latency_s = time.perf_counter() - t0
+                    return res
+                seed = item.seed
 
         hits_before = self.stats.compile_cache_hits
         fn = self._executable(bucket)
         compile_hit = self.stats.compile_cache_hits > hits_before
 
-        warm_key = self._warm_key(workload_key, Qp, Gp, maskp)
-        carry0, warm_hit = self._get_carry(warm_key)
         if carry0 is None:
-            carry0 = pso.default_carry(jnp.asarray(maskp))
+            carry0 = seed if seed is not None \
+                else pso.default_carry(jnp.asarray(maskp))
 
         if self.mesh is None:
             outs = fn(key, Qp, Gp, maskp, carry0)
@@ -307,13 +563,21 @@ class MatcherService:
         base = collect_result(outs, order=order, crop=(n, m))
         res = ServiceMatchResult(**{f.name: getattr(base, f.name)
                                     for f in dataclasses.fields(MatchResult)})
-        self._put_carry(warm_key, res.carry)
+        self._store_result_carries(req, warm_key, res)
         self.stats.epochs_run += res.epochs_run
-        self.stats.epochs_budgeted += self.cfg.epochs
         if res.found:
             self.stats.found += 1
         if res.carry_verified:
+            # the in-kernel fast path IS Tier 0 for a single call
             self.stats.carry_fastpath_hits += 1
+            self.stats.tier0.hits += 1
+            res.tier = 0
+        else:
+            self.stats.tier2.launches += 1
+            self.stats.tier2.checked += 1
+            if res.found:
+                self.stats.tier2.hits += 1
+            res.tier = 2
         res.bucket = bucket
         res.compile_cache_hit = compile_hit
         res.warm_hit = warm_hit
@@ -323,10 +587,12 @@ class MatcherService:
     # -- request coalescing ------------------------------------------------
 
     def submit(self, query: Graph, target: Graph,
-               key: Optional[jax.Array] = None, workload_key=None) -> int:
+               key: Optional[jax.Array] = None, workload_key=None,
+               engine_sig: Optional[bytes] = None) -> int:
         """Queue a problem for the next ``drain``; returns its ticket
         index into the results list ``drain`` will return."""
-        self._pending.append(self._prepare(query, target, key, workload_key))
+        self._pending.append(self._prepare(query, target, key, workload_key,
+                                           engine_sig))
         return len(self._pending) - 1
 
     @property
@@ -334,11 +600,16 @@ class MatcherService:
         return len(self._pending)
 
     def drain(self) -> List[ServiceMatchResult]:
-        """Flush the pending queue: all same-bucket requests coalesce into
-        padded batch launches (one jit dispatch each), largest batch class
-        first. Results come back in submission order; every request in a
-        launch reports the same ``latency_s`` (the batch is one decision —
-        its cost is paid once, not per problem)."""
+        """Flush the pending queue through the tiered pipeline.
+
+        Same-bucket requests form one pipeline group: Tier 0 revalidates
+        every stored carry in one cheap launch, Tier 1 rebases similar
+        carries for the misses, and only the residual requests launch the
+        Tier-2 swarm (chunked to batch classes). Results come back in
+        submission order; each request's ``latency_s`` is the wall time
+        of the launches that actually served it, so an easy request no
+        longer pays a hard neighbour's epochs.
+        """
         pending, self._pending = self._pending, []
         if not pending:
             return []
@@ -348,58 +619,261 @@ class MatcherService:
             groups.setdefault(req.bucket, []).append(i)
         max_chunk = self.batch_classes[-1]
         for bucket, idxs in groups.items():
-            for pos in range(0, len(idxs), max_chunk):
-                chunk = idxs[pos:pos + max_chunk]
-                self._launch_batch(bucket, [pending[i] for i in chunk],
-                                   chunk, results)
+            reqs = [pending[i] for i in idxs]
+            if self._tiers_active():
+                self._run_pipeline(bucket, reqs, idxs, results)
+            else:
+                for pos in range(0, len(idxs), max_chunk):
+                    chunk = idxs[pos:pos + max_chunk]
+                    self._launch_batch_legacy(
+                        bucket, [pending[i] for i in chunk], chunk, results)
         return results  # type: ignore[return-value]
 
     def match_many(self, problems: Sequence[Tuple[Graph, Graph]],
                    keys: Optional[Sequence[jax.Array]] = None,
-                   workload_keys: Optional[Sequence] = None
+                   workload_keys: Optional[Sequence] = None,
+                   engine_sigs: Optional[Sequence[Optional[bytes]]] = None
                    ) -> List[ServiceMatchResult]:
         """Convenience: submit a burst of (query, target) problems and
-        drain them as coalesced batch launches."""
+        drain them through the tiered pipeline."""
         for i, (q, g) in enumerate(problems):
             self.submit(q, g,
                         key=None if keys is None else keys[i],
                         workload_key=(None if workload_keys is None
-                                      else workload_keys[i]))
+                                      else workload_keys[i]),
+                        engine_sig=(None if engine_sigs is None
+                                    else engine_sigs[i]))
         return self.drain()
 
-    def _launch_batch(self, bucket, reqs: List[_PendingRequest],
+    # -- the tiered pipeline ----------------------------------------------
+
+    def _intake(self, reqs: List[_PendingRequest], tickets: List[int]
+                ) -> List[_PipelineItem]:
+        """Shared per-request intake for both drain paths: call/budget
+        accounting, exact-carry lookup, group coalescing stats."""
+        t_start = time.perf_counter()
+        items: List[_PipelineItem] = []
+        for req, ticket in zip(reqs, tickets):
+            self.stats.calls += 1
+            self.stats.epochs_budgeted += self.cfg.epochs
+            wk = self._warm_key(req)
+            carry, hit = self._get_carry(wk)
+            items.append(_PipelineItem(req=req, ticket=ticket, warm_key=wk,
+                                       carry=carry, warm_hit=hit,
+                                       t0=t_start))
+        if len(items) > 1:
+            # the group shares ONE pipeline decision, whichever tier ends
+            # up serving each member
+            self.stats.coalesced_requests += len(items)
+        return items
+
+    def _run_pipeline(self, bucket, reqs: List[_PendingRequest],
                       tickets: List[int], results: List) -> None:
-        """One coalesced launch: gather per-problem warm carries, pad the
-        problem stack to the batch class, run, scatter results+carries."""
+        """Revalidate → similarity-rebase → swarm for one bucket group."""
+        items = self._intake(reqs, tickets)
+        max_chunk = self.batch_classes[-1]
+
+        # ---- Tier 0: batched revalidation of every stored carry ----
+        residual: List[_PipelineItem] = [it for it in items
+                                         if it.carry is None]
+        cand = [it for it in items if it.carry is not None]
+        for pos in range(0, len(cand), max_chunk):
+            chunk = cand[pos:pos + max_chunk]
+            residual.extend(self._launch_revalidate(
+                bucket, chunk, [it.carry for it in chunk], tier=0))
+
+        # ---- Tier 1: rebase the nearest similar carry for the misses ----
+        if self.similarity and residual:
+            t1_items, t1_carries = [], []
+            for it in residual:
+                nb = self._lookup_neighbor(it)
+                if nb is not None:
+                    t1_items.append(it)
+                    t1_carries.append(nb)
+            for pos in range(0, len(t1_items), max_chunk):
+                self._launch_revalidate(
+                    bucket, t1_items[pos:pos + max_chunk],
+                    t1_carries[pos:pos + max_chunk], tier=1)
+
+        # ---- Tier 2: swarm sized to the residual (hard) subset ----
+        residual = [it for it in items if it.result is None]
+        for pos in range(0, len(residual), max_chunk):
+            self._launch_swarm(bucket, residual[pos:pos + max_chunk])
+
+        for it in items:
+            it.result.latency_s = it.latency_s
+            results[it.ticket] = it.result
+
+    def _lookup_neighbor(self, item: _PipelineItem) -> Optional[tuple]:
+        """Similarity-store probe for one Tier-0 miss; returns the carry
+        of the nearest stored platform state, or None."""
+        req = item.req
+        if req.engine_sig is None:
+            return None
+        self.stats.sim_lookups += 1
+        nb = self._carries.nearest(
+            req.qdigest, req.bucket, req.engine_sig,
+            # the exact carry already failed revalidation — don't retry it
+            exclude_sig=req.engine_sig if item.carry is not None else None)
+        if nb is None:
+            return None
+        self.stats.sim_neighbor_hits += 1
+        return nb[1]
+
+    def _launch_revalidate(self, bucket, items: List[_PipelineItem],
+                           carries: List[tuple], tier: int
+                           ) -> List[_PipelineItem]:
+        """One Tier-0/1 launch: revalidate B carries in a single dispatch.
+
+        Hits get their result attached (0 epochs, revalidation cost);
+        misses are returned for the next tier. Tier-1 misses keep the
+        rebased carry (f* reset to -inf) as their Tier-2 swarm seed."""
         t0 = time.perf_counter()
-        B = len(reqs)
+        B = len(items)
         bclass = self._batch_class(B)
-        self.stats.calls += B
+        tstats = self.stats.tier0 if tier == 0 else self.stats.tier1
+
+        hits_before = self.stats.compile_cache_hits
+        fn = self._executable_reval(bucket, bclass)
+        compile_hit = self.stats.compile_cache_hits > hits_before
+
+        reqs = [it.req for it in items]
+        padded, carries = list(reqs), list(carries)
+        if bclass > B:
+            pad_req, pad_carry = self._pad_slot(bucket, reqs[0], carries[0])
+            padded += [pad_req] * (bclass - B)
+            carries += [pad_carry] * (bclass - B)
+        Qb = np.stack([r.Qp for r in padded])
+        Gb = np.stack([r.Gp for r in padded])
+        maskb = np.stack([r.maskp for r in padded])
+        carry0 = tuple(np.stack([np.asarray(c[i]) for c in carries])
+                       for i in range(3))
+
+        outs = fn(Qb, Gb, maskb, carry0)
+        # Tier 0 re-validates this problem's own carry (carried-f* gate);
+        # Tier 1 additionally requires the rebased projection to clear the
+        # fitness bound on THIS problem (stored f* isn't transferable)
+        ok = np.asarray(outs["ok" if tier == 0 else "ok_rebase"])
+        maps = np.asarray(outs["mapping"])
+        fits = np.asarray(outs["fitness"])
+        S_rb = np.asarray(outs["S_star"])
+        S_bar_rb = np.asarray(outs["S_bar"])
+        done = time.perf_counter()
+
+        tstats.launches += 1
+        tstats.checked += B
+        tstats.wall_s += done - t0
+        misses: List[_PipelineItem] = []
+        for j, it in enumerate(items):
+            it.latency_s = done - it.t0
+            if not ok[j]:
+                if tier == 1:
+                    it.seed = (S_rb[j], np.float32(-np.inf), S_bar_rb[j])
+                misses.append(it)
+                continue
+            tstats.hits += 1
+            self.stats.carry_fastpath_hits += 1
+            self.stats.found += 1
+            if tier == 0:
+                carry, f_res = carries[j], float(np.asarray(carries[j][1]))
+            else:
+                carry = (S_rb[j], fits[j], S_bar_rb[j])
+                f_res = float(fits[j])
+                self._put_carry(it.warm_key, carry)
+                if self.warm_start and it.req.engine_sig is not None:
+                    self._carries.put_similar(it.req.qdigest, bucket,
+                                              it.req.engine_sig, carry)
+            it.result = self._revalidated_result(
+                it, maps[j], f_res, carry, tier=tier, batch=B,
+                compile_hit=compile_hit)
+        return misses
+
+    def _revalidated_result(self, item: _PipelineItem, M_c: np.ndarray,
+                            f_res: float, carry, *, tier: int, batch: int,
+                            compile_hit: bool) -> ServiceMatchResult:
+        """Host-side result for a request served by revalidation alone —
+        the 0-epoch equivalent of what ``collect_result`` produces when
+        the in-kernel fast path skipped every epoch."""
+        req, cfg = item.req, self.cfg
+        n, m = req.crop
+        M = np.asarray(M_c)[:n, :m]
+        unperm = np.empty_like(M)
+        unperm[req.order, :] = M
+        return ServiceMatchResult(
+            mapping=unperm,
+            feasible_count=0,
+            f_star=f_res,
+            f_star_trace=np.full((cfg.epochs, cfg.inner_steps), f_res,
+                                 np.float32),
+            all_mappings=np.zeros((0, n, m), np.uint8),
+            all_feasible=np.zeros((0,), bool),
+            all_fitness=np.zeros((0,), np.float32),
+            carry=carry, epochs_run=0, carry_verified=True,
+            bucket=req.bucket, compile_cache_hit=compile_hit,
+            warm_hit=item.warm_hit, batch_size=batch,
+            coalesced=batch > 1, tier=tier)
+
+    # -- batch launches ----------------------------------------------------
+
+    def _pad_slot(self, bucket, like: _PendingRequest, like_carry
+                  ) -> Tuple[_PendingRequest, tuple]:
+        """Pad filler for a batch launch: a trivial problem whose carry
+        re-validates in epoch 0, so ``scan_epochs_batch`` freezes the pad
+        slots immediately instead of re-burning a real problem's epoch
+        budget (the old behaviour replicated problem 0 verbatim). Falls
+        back to that replication (slot 0's problem AND carry, so the pad
+        mirrors its trajectory exactly) for the degenerate n_pad > m_pad
+        buckets where no injective trivial mask exists."""
+        n_pad, m_pad = bucket
+        if m_pad < n_pad:
+            return like, like_carry
+        Qp = np.zeros((n_pad, n_pad), dtype=like.Qp.dtype)
+        Gp = np.zeros((m_pad, m_pad), dtype=like.Gp.dtype)
+        maskp = np.zeros((n_pad, m_pad), dtype=like.maskp.dtype)
+        idx = np.arange(n_pad)
+        maskp[idx, idx] = 1
+        S_id = np.zeros((n_pad, m_pad), np.float32)
+        S_id[idx, idx] = 1.0
+        # f* = +inf clears ANY early_exit_fitness bound, so the pad slot
+        # is pre-finished regardless of the configured threshold
+        carry = (S_id, np.float32(np.inf), S_id.copy())
+        req = _PendingRequest(key=like.key, workload_key=None,
+                              order=np.arange(n_pad),
+                              crop=(n_pad, m_pad), bucket=bucket,
+                              Qp=Qp, Gp=Gp, maskp=maskp)
+        return req, carry
+
+    def _launch_swarm(self, bucket, items: List[_PipelineItem]) -> None:
+        """One Tier-2 swarm launch over the pipeline's residual items
+        (carries already resolved: failed exact carry, rebased neighbour
+        seed, or the cold prior)."""
+        t0 = time.perf_counter()
+        B = len(items)
+        bclass = self._batch_class(B)
 
         hits_before = self.stats.compile_cache_hits
         fn = self._executable_batch(bucket, bclass)
         compile_hit = self.stats.compile_cache_hits > hits_before
 
-        warm_keys, carries, warm_hits = [], [], []
-        for req in reqs:
-            wk = self._warm_key(req.workload_key, req.Qp, req.Gp, req.maskp)
-            carry, hit = self._get_carry(wk)
-            if carry is None:
-                carry = pso.default_carry(jnp.asarray(req.maskp))
-            warm_keys.append(wk)
-            carries.append(carry)
-            warm_hits.append(hit)
+        reqs = [it.req for it in items]
+        carries = []
+        for it in items:
+            if it.carry is not None:
+                carries.append(it.carry)
+            elif it.seed is not None:
+                carries.append(it.seed)
+            else:
+                carries.append(pso.default_carry(jnp.asarray(it.req.maskp)))
 
-        # pad the stack to the batch class by replicating problem 0
-        # verbatim — same key AND same carry, so every pad slot follows
-        # problem 0's exact trajectory and is done the instant it is:
-        # padding never extends the batch's live-epoch window (its only
-        # cost is the slot width). Results are discarded.
-        # All stacking stays on the host (numpy): the jit call uploads each
-        # stacked array once — no per-problem device dispatches.
         pad = bclass - B
-        padded = reqs + [reqs[0]] * pad
-        carries = carries + [carries[0]] * pad
+        padded = list(reqs)
+        if pad:
+            pad_req, pad_carry = self._pad_slot(bucket, reqs[0], carries[0])
+            padded += [pad_req] * pad
+            carries = carries + [pad_carry] * pad
+            if pad_req is not reqs[0] and self.cfg.early_exit \
+                    and self.cfg.carry_fastpath:
+                self.stats.pad_slots_frozen += pad
         keysb = np.stack([np.asarray(r.key) for r in padded])
         Qb = np.stack([r.Qp for r in padded])
         Gb = np.stack([r.Gp for r in padded])
@@ -412,38 +886,53 @@ class MatcherService:
             outs, bclass,
             orders=[r.order for r in padded],
             crops=[r.crop for r in padded])
-        latency = time.perf_counter() - t0
+        done = time.perf_counter()
 
         self.stats.batch_launches += 1
         self.stats.batch_problems += B
         self.stats.batch_slots += bclass
-        if B > 1:
-            self.stats.coalesced_requests += B
-        for j, (req, ticket) in enumerate(zip(reqs, tickets)):
+        self.stats.tier2.launches += 1
+        self.stats.tier2.checked += B
+        self.stats.tier2.wall_s += done - t0
+        for j, it in enumerate(items):
             base = batch_results[j]
             res = ServiceMatchResult(
                 **{f.name: getattr(base, f.name)
                    for f in dataclasses.fields(MatchResult)})
-            self._put_carry(warm_keys[j], res.carry)
+            self._store_result_carries(it.req, it.warm_key, res)
             self.stats.epochs_run += res.epochs_run
-            self.stats.epochs_budgeted += self.cfg.epochs
             if res.found:
                 self.stats.found += 1
+                self.stats.tier2.hits += 1
             if res.carry_verified:
                 self.stats.carry_fastpath_hits += 1
             res.bucket = bucket
             res.compile_cache_hit = compile_hit
-            res.warm_hit = warm_hits[j]
-            res.latency_s = latency
+            res.warm_hit = it.warm_hit
             res.batch_size = B
             res.coalesced = B > 1
-            results[ticket] = res
+            res.tier = 2
+            # end-to-end drain latency: a Tier-2 request also waited out
+            # every pipeline launch that preceded this one
+            it.latency_s = done - it.t0
+            it.result = res
+
+    def _launch_batch_legacy(self, bucket, reqs: List[_PendingRequest],
+                             tickets: List[int], results: List) -> None:
+        """The untiered (PR-2) drain path: every request goes straight to
+        one uniform swarm launch. Kept as the ``tiered=False`` baseline —
+        `benchmarks/bench_tiers.py` measures the pipeline against it."""
+        items = self._intake(reqs, tickets)
+        self._launch_swarm(bucket, items)
+        for it in items:
+            it.result.latency_s = it.latency_s
+            results[it.ticket] = it.result
 
     # -- reporting ---------------------------------------------------------
 
     def stats_dict(self) -> Dict[str, float]:
         s = self.stats
-        return {
+        out = {
             "calls": s.calls,
             "compile_cache_hits": s.compile_cache_hits,
             "compile_cache_misses": s.compile_cache_misses,
@@ -461,4 +950,18 @@ class MatcherService:
             "batch_slots": s.batch_slots,
             "batch_occupancy": s.batch_occupancy,
             "carry_fastpath_hits": s.carry_fastpath_hits,
+            "revalidated_rate": s.revalidated_rate,
+            "pad_slots_frozen": s.pad_slots_frozen,
+            "sim_lookups": s.sim_lookups,
+            "sim_neighbor_hits": s.sim_neighbor_hits,
+            "sim_evictions": s.sim_evictions,
+            "sim_entries": self._carries.sim_entries,
         }
+        for name in ("tier0", "tier1", "tier2"):
+            t: TierStats = getattr(s, name)
+            out[f"{name}_launches"] = t.launches
+            out[f"{name}_checked"] = t.checked
+            out[f"{name}_hits"] = t.hits
+            out[f"{name}_hit_rate"] = t.hit_rate
+            out[f"{name}_wall_s"] = t.wall_s
+        return out

@@ -1,8 +1,9 @@
 from repro.sched.tasks import (TaskSpec, Scenario, make_burst_scenario,
-                               make_scenario)
+                               make_mixed_burst_scenario, make_scenario)
 from repro.sched.simulator import Simulator, SimConfig, SimResult
 from repro.sched.schedulers import (SCHEDULERS, IMMSchedScheduler,
                                     IsoSchedScheduler, LTSScheduler,
                                     get_scheduler)
-from repro.sched.metrics import (latency_bound_throughput, speedup_table,
+from repro.sched.metrics import (latency_bound_throughput,
+                                 pipeline_tier_rates, speedup_table,
                                  energy_efficiency)

@@ -42,10 +42,33 @@ def energy_efficiency(results: Dict[str, SimResult],
 def matcher_service_stats(results: Dict[str, SimResult]
                           ) -> Dict[str, Dict[str, float]]:
     """Online matcher-service counters per scheduler: compile-cache and
-    warm-start hit rates, and epochs saved by early exit. Schedulers that
-    don't run a matcher service report an empty dict."""
+    warm-start hit rates, per-tier pipeline counters, and epochs saved by
+    early exit. Schedulers without any matching state (LTS baselines)
+    report an empty dict; IsoSched reports its host memo counters."""
     return {name: dict(r.matcher_stats) for name, r in results.items()
             if r.matcher_stats}
+
+
+def pipeline_tier_rates(result: SimResult) -> Dict[str, float]:
+    """Per-tier serve rates of the tiered matcher pipeline for one run.
+
+    Combines the service's real counters (``tier{0,1,2}_hits``, from
+    ``matcher_mode="real"`` launches) with the scheduler's analytic tier
+    decisions (``sched_tier{0,1,2}_decisions``, charged in every mode) so
+    the decision mix is inspectable regardless of matcher mode."""
+    ms = result.matcher_stats
+    out: Dict[str, float] = {}
+    sched_total = sum(ms.get(f"sched_tier{i}_decisions", 0)
+                      for i in range(3))
+    for i in range(3):
+        out[f"tier{i}_hits"] = ms.get(f"tier{i}_hits", 0)
+        d = ms.get(f"sched_tier{i}_decisions", 0)
+        out[f"sched_tier{i}_decisions"] = d
+        out[f"sched_tier{i}_rate"] = d / max(sched_total, 1)
+    calls = ms.get("calls", 0)
+    out["revalidated_rate"] = ms.get("revalidated_rate", 0.0)
+    out["calls"] = calls
+    return out
 
 
 def latency_bound_throughput(scheduler_name: str, platform: Platform,

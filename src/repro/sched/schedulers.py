@@ -37,6 +37,7 @@ Paradigms:
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Dict, List, Optional, Set
 
 import numpy as np
@@ -44,7 +45,9 @@ import numpy as np
 from repro.core import interrupts, preemptible_dag, ullmann
 from repro.core.graphs import compatibility_mask
 from repro.core.service import MatcherService
-from repro.accel.target_graph import free_engine_graph, free_engine_signature
+from repro.accel.target_graph import (free_engine_graph,
+                                      free_engine_signature,
+                                      signature_bits)
 
 _EPS = 1e-15
 
@@ -141,8 +144,20 @@ class SchedulerBase:
 # ---------------------------------------------------------------------------
 
 class IMMSchedScheduler(SchedulerBase):
+    """TSS, interruptible, with the *tiered* matcher pipeline's latency
+    accounting: every matching decision is first a cheap revalidation
+    (Tier 0/1 — one projection on the accelerator), and only predicted
+    warm misses (the hard subset of a burst) pay for a swarm launch.
+    The predictor mirrors the service's carry store: a (workload,
+    free-engine signature) pair seen before is a Tier-0 hit; the same
+    workload on a sufficiently-overlapping engine set is a Tier-1 rebase;
+    anything else swarms (Tier 2)."""
     name = "immsched"
     paradigm = "tss"
+
+    _SIG_MEMORY = 64                 # platform states remembered per task
+    _REBASE_OVERLAP = 0.5            # min engine-set overlap for a Tier-1
+                                     # rebase prediction
 
     def __init__(self, quantized: bool = True):
         self.quantized = quantized
@@ -151,12 +166,81 @@ class IMMSchedScheduler(SchedulerBase):
     def reset(self, sim):
         super().reset(sim)
         # online matcher service: compiled-shape cache + warm starts keyed
-        # by (workload, free-engine set), early-exit epochs
+        # by (workload, free-engine set), early-exit epochs, tiered drain
         cfg = sim.cfg.pso_cfg.replace(quantized=self.quantized)
         self._service = MatcherService(cfg)
+        self._tier_decisions = {"tier0": 0, "tier1": 0, "tier2": 0}
+        # per workload: LRU of seen platform states, sig → unpacked bits
+        self._state_index: Dict[str, "OrderedDict[bytes, np.ndarray]"] = {}
 
     def matcher_stats(self) -> Dict[str, float]:
-        return self._service.stats_dict() if self._service else {}
+        d = self._service.stats_dict() if self._service else {}
+        for k, v in getattr(self, "_tier_decisions", {}).items():
+            d[f"sched_{k}_decisions"] = v
+        return d
+
+    # -- warm-state predictor (mirrors the service carry store) ----------
+
+    def _free_sig(self, sim, tasks) -> bytes:
+        free = set(self._free_engines(sim, tasks))
+        return free_engine_signature(
+            [e in free for e in range(sim.platform.engines)])
+
+    def _predict_tier(self, name: str, sig: bytes) -> int:
+        sigs = self._state_index.get(name)
+        if not sigs:
+            return 2
+        if sig in sigs:
+            return 0
+        bits = signature_bits(sig)
+        denom = max(int(bits.sum()), 1)
+        for b in sigs.values():         # bits decoded once, at note time
+            if b.shape == bits.shape \
+                    and int((b & bits).sum()) / denom >= self._REBASE_OVERLAP:
+                return 1
+        return 2
+
+    def _note_state(self, name: str, sig: bytes) -> None:
+        d = self._state_index.setdefault(name, OrderedDict())
+        d[sig] = signature_bits(sig)
+        d.move_to_end(sig)
+        while len(d) > self._SIG_MEMORY:
+            d.popitem(last=False)
+
+    def _charge_tiers(self, sim, normal, sig, decision) -> None:
+        """Per-tier latency for a burst: one revalidation launch covers
+        the warm tasks (Tier 0/1); a swarm launch sized to the
+        predicted-miss (hard) subset is charged only to those tasks — an
+        easy task in a mixed burst no longer waits out the hard
+        neighbours' swarm. A fully cold burst issues NO revalidation
+        launch (the real pipeline skips Tier 0/1 when nothing is stored),
+        so it is charged the swarm alone."""
+        m = sim.platform.engines
+        tiers = {t.spec.task_id: self._predict_tier(t.spec.name, sig)
+                 for t in normal}
+        warm = [t for t in normal if tiers[t.spec.task_id] < 2]
+        hard = [t for t in normal if tiers[t.spec.task_id] == 2]
+        st_r = se_r = 0.0
+        if warm:
+            n_warm = max(self._window_tiles(sim, t) for t in warm)
+            st_r, se_r = sim.cost.sched_immsched_revalidate(
+                min(n_warm, 64), m, max(min(n_warm, m) // 2, 1),
+                batch=len(warm))
+        st_s = se_s = 0.0
+        if hard:
+            n_hard = max(self._window_tiles(sim, t) for t in hard)
+            st_s, se_s = sim.cost.sched_immsched(
+                min(n_hard, 64), m, sim.cfg.pso_cfg,
+                max(min(n_hard, m) // 2, 1))
+        for t in normal:
+            tier = tiers[t.spec.task_id]
+            self._tier_decisions[f"tier{tier}"] += 1
+            # Tier-2 tasks queue behind the revalidation launch (if one
+            # ran) before their swarm completes
+            decision["delay"][t.spec.task_id] = (st_r if tier < 2
+                                                 else st_r + st_s)
+            self._note_state(t.spec.name, sig)
+        decision["energy"] += se_r + se_s
 
     def on_event(self, sim, now, tasks, trigger, arrived=None):
         if trigger == "activate":
@@ -168,25 +252,13 @@ class IMMSchedScheduler(SchedulerBase):
             if urgent:
                 self._interrupt(sim, now, tasks, urgent, decision)
             if normal:
-                # the whole burst is matched in ONE coalesced swarm
-                # launch: cost of the largest window, charged once,
-                # shared by every task in the batch
-                n = max(self._window_tiles(sim, t) for t in normal)
-                st, se = sim.cost.sched_immsched(
-                    min(n, 64), sim.platform.engines, sim.cfg.pso_cfg,
-                    max(min(n, sim.platform.engines) // 2, 1))
-                for t in normal:
-                    decision["delay"][t.spec.task_id] = st
-                decision["energy"] += se
+                self._charge_tiers(sim, normal,
+                                   self._free_sig(sim, tasks), decision)
         elif trigger == "completion":
             waiting = self._waiting(tasks)
             if waiting:
-                n = self._window_tiles(sim, waiting[0])
-                st, se = sim.cost.sched_immsched(
-                    min(n, 64), sim.platform.engines, sim.cfg.pso_cfg,
-                    max(min(n, sim.platform.engines) // 2, 1))
-                decision["delay"][waiting[0].spec.task_id] = st
-                decision["energy"] += se
+                self._charge_tiers(sim, waiting[:1],
+                                   self._free_sig(sim, tasks), decision)
         return self._dispatch(sim, now, tasks, decision)
 
     def _interrupt(self, sim, now, tasks, urgent_list, decision):
@@ -217,8 +289,20 @@ class IMMSchedScheduler(SchedulerBase):
                                             urgent.spec.priority, now)
             engines = dec.freed_engines[:need]
             m = max(len(dec.freed_engines), 1)
-            st, se = sim.cost.sched_immsched(min(n, 64), m, sim.cfg.pso_cfg,
-                                             max(len(engines), 1))
+            # tiered accounting: a (workload, freed-engine-set) pair the
+            # pipeline has warm state for re-validates instead of swarming
+            freed_set = set(dec.freed_engines)
+            sig = free_engine_signature(
+                [e in freed_set for e in range(sim.platform.engines)])
+            tier = self._predict_tier(urgent.spec.name, sig)
+            self._tier_decisions[f"tier{tier}"] += 1
+            self._note_state(urgent.spec.name, sig)
+            if tier < 2:
+                st, se = sim.cost.sched_immsched_revalidate(
+                    min(n, 64), m, max(len(engines), 1))
+            else:
+                st, se = sim.cost.sched_immsched(
+                    min(n, 64), m, sim.cfg.pso_cfg, max(len(engines), 1))
             # one batched launch: latency = slowest problem in the batch,
             # energy = one swarm (the problems share it), not K swarms
             st_batch = max(st_batch, st)
@@ -257,7 +341,7 @@ class IMMSchedScheduler(SchedulerBase):
         """Run the burst's matchings as one coalesced service launch.
         ``pairs``: (urgent_task, freed_engine_list) per urgent arrival.
         Returns per-task engine lists (None where no match)."""
-        problems, wkeys, targets, slots = [], [], [], []
+        problems, wkeys, sigs, targets, slots = [], [], [], [], []
         for urgent, freed in pairs:
             pd = self._pdag(sim, urgent)
             free = [e in set(freed) for e in range(sim.platform.engines)]
@@ -274,8 +358,11 @@ class IMMSchedScheduler(SchedulerBase):
             slots.append(len(problems))
             problems.append((q, tgt))
             targets.append(tgt)
-            wkeys.append((urgent.spec.name, free_engine_signature(free)))
-        results = (self._service.match_many(problems, workload_keys=wkeys)
+            sig = free_engine_signature(free)
+            wkeys.append((urgent.spec.name, sig))
+            sigs.append(sig)
+        results = (self._service.match_many(problems, workload_keys=wkeys,
+                                            engine_sigs=sigs)
                    if problems else [])
         out: List[Optional[List[int]]] = []
         for slot in slots:
@@ -289,9 +376,28 @@ class IMMSchedScheduler(SchedulerBase):
 
 
 class IsoSchedScheduler(SchedulerBase):
-    """TSS + preemption, but scheduling = serial Ullmann on the host CPU."""
+    """TSS + preemption, but scheduling = serial Ullmann on the host CPU.
+
+    Warm traffic goes through a minimal host-side memo cache keyed like
+    the matcher service — (workload, window config, platform state) — so
+    a repeat decision re-verifies the cached mapping with one refinement
+    sweep instead of re-running the backtracking search. This keeps the
+    IsoSched baseline apples-to-apples with IMMSched's warm tiers in
+    `benchmarks/`: both sides get to remember their last decision; the
+    gap that remains is serial-CPU vs on-accelerator matching."""
     name = "isosched"
     paradigm = "tss"
+
+    def reset(self, sim):
+        super().reset(sim)
+        self._memo: Set = set()
+        self._memo_hits = 0
+        self._memo_misses = 0
+
+    def matcher_stats(self) -> Dict[str, float]:
+        return {"memo_hits": self._memo_hits,
+                "memo_misses": self._memo_misses,
+                "memo_entries": len(getattr(self, "_memo", {}))}
 
     def on_event(self, sim, now, tasks, trigger, arrived=None):
         if trigger == "activate":
@@ -344,6 +450,21 @@ class IsoSchedScheduler(SchedulerBase):
     def _serial_match_cost(self, sim, task, now):
         n = self._window_tiles(sim, task)
         m = sim.platform.engines
+        # host memo keyed like the service: (workload, window config,
+        # platform state). IsoSched always matches onto the full array,
+        # so the state component is the all-free signature.
+        sig = free_engine_signature([True] * m)
+        memo_key = (task.spec.name, sim.cfg.window_stages, m, sig)
+        if memo_key in self._memo:
+            # warm hit: re-verify the remembered mapping with ONE
+            # refinement sweep — no backtracking search
+            self._memo_hits += 1
+            mac_ops, nodes = 2.0 * n * m * m + 2.0 * n * n * m, 1
+            st, se = sim.cost.sched_serial_cpu(mac_ops, int(nodes))
+            start = max(self.cpu_free_at, now)
+            self.cpu_free_at = start + st
+            return (start - now) + st, se
+        self._memo_misses += 1
         if sim.cfg.matcher_mode == "real":
             pd = self._pdag(sim, task)
             tgt = free_engine_graph(sim.platform,
@@ -356,15 +477,23 @@ class IsoSchedScheduler(SchedulerBase):
                             types=q.types[keep], weights=q.weights[keep])
             stats = ullmann.SerialStats()
             mask = compatibility_mask(q, tgt)
-            ullmann.serial_ullmann(q.adj, tgt.adj, mask, max_solutions=1,
-                                   stats=stats)
+            sols = ullmann.serial_ullmann(q.adj, tgt.adj, mask,
+                                          max_solutions=1, stats=stats)
             mac_ops, nodes = stats.mac_ops, stats.nodes_visited
+            if not sols:
+                # nothing to remember: an unmatchable window has no
+                # mapping to re-verify, so repeats pay the search again
+                st, se = sim.cost.sched_serial_cpu(mac_ops, int(nodes))
+                start = max(self.cpu_free_at, now)
+                self.cpu_free_at = start + st
+                return (start - now) + st, se
         else:
             # calibrated against serial_ullmann stats on planted windows
             nodes = 0.3 * n
             sweeps_per_node = 2.0
             mac_ops = nodes * sweeps_per_node * (
                 2 * n * m * m + 2 * n * n * m)
+        self._memo.add(memo_key)
         st, se = sim.cost.sched_serial_cpu(mac_ops, int(nodes))
         # single host CPU: queue behind earlier scheduling work
         start = max(self.cpu_free_at, now)

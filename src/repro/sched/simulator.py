@@ -19,7 +19,11 @@ Arrival events are *coalesced*: every task arriving at the same instant
 (compound-Poisson bursts) is delivered to the scheduler in ONE
 ``on_event(trigger="arrival", arrived=[...])`` call, so batching-aware
 schedulers (IMMSched's coalesced matcher launches) can make one decision
-for the whole burst and pay its latency once.
+for the whole burst and pay its latency once. Latency within a burst is
+*per-tier*: the scheduler may charge different members of one event
+different delays (IMMSched charges revalidated Tier-0/1 decisions the
+cheap projection cost and only the hard residue a swarm launch), which
+``_apply`` honours per task via the decision's ``delay`` map.
 
 Energy: execution energy is charged pro-rata with drained work (preemption
 context-motion costs are folded into the task's buckets and energy);

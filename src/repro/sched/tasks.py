@@ -94,6 +94,74 @@ def make_burst_scenario(complexity: str, *, burst_size: int = 4,
                          burst_frac=burst_frac, **kw)
 
 
+def make_mixed_burst_scenario(easy: str = "simple", hard: str = "complex",
+                              *, rate_hz: float = 20.0,
+                              horizon: float = 2.0,
+                              burst_size: int = 8,
+                              hard_frac: float = 0.25,
+                              burst_frac: float = 0.7,
+                              churn_rate_hz: float = 0.0,
+                              deadline_slack: float = 2.0,
+                              urgent_slack: float = 1.25,
+                              base_exec_estimate: float = 5e-3,
+                              seed: int = 0) -> Scenario:
+    """Heterogeneous easy/hard bursts + engine-fragmentation churn.
+
+    The stress scenario for the tiered matcher pipeline: with probability
+    ``burst_frac`` an arrival event delivers ``burst_size`` simultaneous
+    tasks of which a ``hard_frac`` fraction come from the ``hard``
+    complexity class and the rest from ``easy`` — the mixed burst where a
+    uniform batched matcher pays the hard subset's max-epochs for every
+    member, but the tiered drain serves the easy majority at revalidation
+    cost and sizes the swarm to the hard residue.
+
+    ``churn_rate_hz`` adds an independent Poisson stream of small *urgent*
+    ``easy``-class tasks with tight deadlines: their preemptions churn the
+    free-engine set (PREMA-style fragmentation), so repeat arrivals see
+    drifted platform states — exact content-keyed warm carries miss and
+    only Tier-1 similarity rebases keep the warm hit rate up.
+    """
+    rng = np.random.default_rng(seed)
+    easy_pool = workload_complexity_class(easy)
+    hard_pool = workload_complexity_class(hard)
+    n_hard = max(int(round(hard_frac * burst_size)), 1) \
+        if hard_frac > 0 else 0
+    tasks: List[TaskSpec] = []
+
+    def add(wl, t, urgent):
+        slack = urgent_slack if urgent else deadline_slack
+        nominal = base_exec_estimate * (wl.total_macs / 1e9 + 0.2)
+        tasks.append(TaskSpec(
+            name=wl.name, workload=wl, arrival=float(t),
+            priority=2 if urgent else 1,
+            deadline=float(t + slack * nominal + 1e-3),
+            urgent=urgent))
+
+    t = 0.0
+    while True:
+        t += rng.exponential(1.0 / rate_hz)
+        if t >= horizon:
+            break
+        if rng.random() < burst_frac:
+            kinds = [True] * n_hard + [False] * (burst_size - n_hard)
+            for is_hard in kinds:
+                pool = hard_pool if is_hard else easy_pool
+                add(pool[rng.integers(len(pool))], t, urgent=False)
+        else:
+            add(easy_pool[rng.integers(len(easy_pool))], t, urgent=False)
+
+    if churn_rate_hz > 0:
+        t = 0.0
+        while True:
+            t += rng.exponential(1.0 / churn_rate_hz)
+            if t >= horizon:
+                break
+            add(easy_pool[rng.integers(len(easy_pool))], t, urgent=True)
+
+    name = f"mixed-{easy}-{hard}-burst{burst_size}"
+    return Scenario(name=name, tasks=tasks, horizon=horizon)
+
+
 def fixed_scenario(workloads: Sequence[WorkloadGraph], *,
                    spacing: float = 1e-3,
                    urgent_last: bool = True,

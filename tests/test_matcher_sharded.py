@@ -35,6 +35,33 @@ SCRIPT = textwrap.dedent("""
     # 8 shards x 24 particles x 5 epochs of candidate mappings came back
     assert res.all_feasible.shape[0] == 5 * 24 * 8
     print("SHARDED-MATCHER-OK", res.feasible_count)
+
+    # distributed revalidation (the tiered pipeline's cheap stage):
+    # replicated fallback (B=1 < devices) and problem-axis sharding (B=8)
+    import jax.numpy as jnp
+    from repro.core import pso as psolib
+    from repro.core.graphs import as_device_graphs, topological_relabel
+    from repro.core.matcher import build_distributed_revalidate_batch
+    qr, _ = topological_relabel(q)
+    Q, G, mask = as_device_graphs(qr, g)
+    carry = tuple(jnp.asarray(c) for c in res.carry)
+    for B in (1, 8):
+        rfn = build_distributed_revalidate_batch(
+            (8, 16), mesh, cfg, ("data", "model"), B)
+        cb = tuple(jnp.stack([c] * B) for c in carry)
+        outs = rfn(jnp.stack([Q] * B), jnp.stack([G] * B),
+                   jnp.stack([mask] * B), cb)
+        ok = np.asarray(outs["ok"])
+        assert ok.shape == (B,)
+        assert len(set(ok.tolist())) == 1   # identical problems agree
+        ref = psolib.revalidate_batch(Q[None], G[None], mask[None],
+                                      cfg, tuple(c[None] for c in carry))
+        assert ok[0] == bool(np.asarray(ref["ok"])[0])
+        if ok[0]:
+            np.testing.assert_array_equal(
+                np.asarray(outs["mapping"])[0],
+                np.asarray(ref["mapping"])[0])
+    print("SHARDED-REVALIDATE-OK")
 """)
 
 
@@ -46,3 +73,4 @@ def test_sharded_matcher_8_devices():
                          capture_output=True, text=True, timeout=900,
                          cwd=os.path.dirname(os.path.dirname(__file__)))
     assert "SHARDED-MATCHER-OK" in out.stdout, out.stderr[-4000:]
+    assert "SHARDED-REVALIDATE-OK" in out.stdout, out.stderr[-4000:]
