@@ -1,0 +1,162 @@
+"""Fused pre-prune benchmark: kernel latency + cold-start share.
+
+The global Ullmann+injectivity pre-prune runs before any swarm epoch, so
+it is pure cold-start latency. Two experiments:
+
+  1. **Fused vs loose prune.** Batched pre-prune of B planted problems
+     through the backend seam (``ops.prune_fixpoint`` — the fused
+     single-dispatch kernel with the in-kernel convergence flag) against
+     the legacy loose-jnp path (``jax.jit(vmap(ref.prune_mask_fixpoint))``
+     — the pre-PR-4 alternation). On CPU both lower through XLA so the
+     ratio is near 1; on TPU set ``REPRO_KERNEL_BACKEND=pallas`` (or
+     ``--backend pallas``) and the fused path becomes one Pallas launch
+     with the mask resident on-chip for the whole fixpoint loop.
+  2. **Cold-start share.** Median wall time of a cold ``pso.match``
+     (prune on) vs the prune launch alone: the fraction of a cold
+     decision the pre-prune accounts for — the number the ROADMAP item
+     targets.
+
+Also cross-checks the fused kernel against the legacy oracle on every
+measured problem (``parity_ok``) and reports the mean in-kernel sweep
+count (the ``prune_sweeps`` observable the scheduler's analytic charge is
+calibrated with).
+
+Emits ``BENCH_prune.json`` and CSV rows on stdout.
+
+Usage: PYTHONPATH=src python -m benchmarks.bench_prune
+           [--batch B] [--n N] [--m M] [--repeats R]
+           [--backend ref|pallas|interpret] [--smoke] [--out FILE]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import graphs, pso
+from repro.kernels import get_backend, ref, resolve_backend_name
+from repro.kernels import ops
+
+
+def _planted_problem(seed: int, n: int, m: int):
+    key = jax.random.PRNGKey(seed)
+    kq, kt = jax.random.split(key)
+    q = graphs.random_dag(kq, n, 0.35)
+    g = graphs.embed_query_in_target(kt, q, m)
+    return graphs.as_device_graphs(q, g)
+
+
+def _stack_problems(batch: int, n: int, m: int):
+    Qs, Gs, Ms = [], [], []
+    for b in range(batch):
+        Q, G, mask = _planted_problem(100 + b, n, m)
+        Qs.append(Q)
+        Gs.append(G)
+        Ms.append(mask)
+    return jnp.stack(Qs), jnp.stack(Gs), jnp.stack(Ms)
+
+
+def _median_wall(fn, repeats: int) -> float:
+    fn()                                   # warm-up (compile)
+    walls = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        walls.append(time.perf_counter() - t0)
+    return statistics.median(walls)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--n", type=int, default=24)
+    ap.add_argument("--m", type=int, default=48)
+    ap.add_argument("--repeats", type=int, default=20)
+    ap.add_argument("--backend", type=str, default=None,
+                    help="kernel backend (default: registry precedence, "
+                         "honouring REPRO_KERNEL_BACKEND)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI")
+    ap.add_argument("--out", type=str, default="BENCH_prune.json")
+    args = ap.parse_args()
+    if args.smoke:
+        args.batch, args.n, args.m, args.repeats = 4, 10, 20, 5
+
+    backend = resolve_backend_name(args.backend)
+    bk = get_backend(backend)
+    Qb, Gb, maskb = _stack_problems(args.batch, args.n, args.m)
+
+    # -- 1. fused (backend seam) vs loose-jnp prune latency --
+    def fused():
+        out, sweeps = bk.prune_fixpoint_batch(maskb, Qb, Gb)
+        jax.block_until_ready(out)
+        return out, sweeps
+
+    legacy_fn = jax.jit(jax.vmap(ref.prune_mask_fixpoint))
+
+    def legacy():
+        out = legacy_fn(maskb, Qb, Gb)
+        jax.block_until_ready(out)
+        return out
+
+    fused_s = _median_wall(fused, args.repeats)
+    legacy_s = _median_wall(legacy, args.repeats)
+    pruned, sweeps = fused()
+    parity_ok = bool(np.array_equal(np.asarray(pruned),
+                                    np.asarray(legacy())))
+    avg_sweeps = float(np.asarray(sweeps).mean())
+
+    # -- 2. cold-start share: prune launch vs a whole cold match --
+    cfg = pso.PSOConfig(num_particles=16 if args.smoke else 32,
+                        epochs=1 if args.smoke else 2,
+                        inner_steps=4 if args.smoke else 8,
+                        backend=backend)
+    Q0, G0, mask0 = Qb[0], Gb[0], maskb[0]
+    key = jax.random.PRNGKey(0)
+
+    def cold_match():
+        outs = pso.match(key, Q0, G0, mask0, cfg)
+        jax.block_until_ready(outs["f_star"])
+
+    def prune_one():
+        out, _ = bk.prune_fixpoint(mask0, Q0, G0)
+        jax.block_until_ready(out)
+
+    cold_s = _median_wall(cold_match, args.repeats)
+    prune_one_s = _median_wall(prune_one, args.repeats)
+    share = min(max(prune_one_s / max(cold_s, 1e-12), 0.0), 1.0)
+
+    result = {
+        "smoke": bool(args.smoke),
+        "backend": backend,
+        "batch": args.batch,
+        "shape": [args.n, args.m],
+        "repeats": args.repeats,
+        "parity_ok": parity_ok,
+        "avg_prune_sweeps": avg_sweeps,
+        "fused_prune_median_s": fused_s,
+        "jnp_prune_median_s": legacy_s,
+        "fused_over_jnp_ratio": fused_s / max(legacy_s, 1e-12),
+        "cold_match_median_s": cold_s,
+        "prune_only_median_s": prune_one_s,
+        "prune_share_of_cold": share,
+    }
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+
+    print("metric,value")
+    for k in ("fused_prune_median_s", "jnp_prune_median_s",
+              "fused_over_jnp_ratio", "avg_prune_sweeps",
+              "cold_match_median_s", "prune_share_of_cold"):
+        print(f"{k},{result[k]:.6g}")
+    print(f"parity_ok,{parity_ok}")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -87,6 +87,33 @@ class CostModel:
         per_epoch = cfg.inner_steps * per_step + refine + project
         return cfg.epochs * per_epoch
 
+    def matcher_prune_macs(self, n: int, m: int, sweeps: int = 4) -> float:
+        """Analytic MAC count of the fused global pre-prune: per fused
+        iteration one Ullmann refinement sweep (four {0,1}/int matmuls)
+        plus one injectivity-propagation pass (row/col reductions)."""
+        refine = 2.0 * n * m * m + 2.0 * n * n * m
+        inject = 3.0 * n * m
+        return max(sweeps, 1) * (refine + inject)
+
+    def sched_immsched_prune(self, n: int, m: int,
+                             engines_for_sched: int = 1,
+                             sweeps: int = 4):
+        """Fused pre-prune of the global compatibility mask ON the
+        accelerator (one kernel launch, mask resident in on-chip memory
+        for the whole fixpoint loop): the cold-start cost every Tier-2
+        (swarm) decision pays before its first epoch. ``sweeps`` is the
+        observed/assumed fused-iteration count (the kernels'
+        ``prune_sweeps`` observable); the pruned mask (n·m bytes, uint8)
+        ships once over the NoC."""
+        p = self.platform
+        macs = self.matcher_prune_macs(n, m, sweeps)
+        rate = (max(engines_for_sched, 1) * p.macs_per_engine * p.clock_hz
+                * self.engine_util_matcher)
+        t = macs / rate + n * m * self.avg_hops / p.noc_link_bw_bytes
+        e = (macs * self.e_mac_int8
+             + n * m * self.avg_hops * self.e_noc_byte_hop)
+        return t, e
+
     def sched_immsched(self, n: int, m: int, cfg: PSOConfig,
                        engines_for_sched: int):
         """IMMSched: matcher runs ON the accelerator (int8 datapath),

@@ -26,7 +26,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import pso
 from repro.core.graphs import Graph, as_device_graphs
-from repro.kernels import ref
+from repro.kernels import backend as kernel_backend
 from repro.runtime.sharding import get_shard_map
 
 
@@ -43,6 +43,8 @@ class MatchResult:
     epochs_run: int = 0                  # epochs executed (< T on early exit)
     carry_verified: bool = False         # warm carry re-validated by one
                                          # projection (0-epoch fast path)
+    prune_sweeps: int = 0                # fused pre-prune iterations run
+                                         # (0 when prune_mask is off)
 
     @property
     def found(self) -> bool:
@@ -93,7 +95,9 @@ def collect_result(outs, order=None, crop=None) -> MatchResult:
         all_mappings=maps, all_feasible=feas, all_fitness=fit,
         carry=(outs["S_star"], outs["f_star"], outs["S_bar"]),
         epochs_run=int(np.asarray(outs["epochs_run"]).reshape(-1)[-1]),
-        carry_verified=carry_ok)
+        carry_verified=carry_ok,
+        prune_sweeps=int(np.asarray(outs.get("prune_sweeps", 0)
+                                    ).reshape(-1)[-1]))
 
 
 def split_batch_outs(outs, batch: int):
@@ -170,8 +174,10 @@ def build_distributed_match(Q_shape: Tuple[int, int], mesh: Mesh,
     def local_match(key, Q, G, mask, carry0):
         n, m = mask.shape
         if cfg.prune_mask:
-            mask = ref.prune_mask_fixpoint(mask, Q, G, cfg.prune_iters
-                                           ).astype(mask.dtype)
+            mask, prune_sweeps = kernel_backend.for_config(
+                cfg).prune_fixpoint(mask, Q, G, cfg.prune_iters)
+        else:
+            prune_sweeps = jnp.int32(0)
         keys = jax.random.split(key[0], cfg.epochs)  # this shard's key
 
         if cfg.early_exit and cfg.carry_fastpath:
@@ -208,6 +214,7 @@ def build_distributed_match(Q_shape: Tuple[int, int], mesh: Mesh,
         outs["epochs_run"] = epochs_run
         outs["carry_mapping"] = M_c
         outs["carry_feasible"] = carry_ok
+        outs["prune_sweeps"] = prune_sweeps
         return outs
 
     shard_axes = P(axis_names)
@@ -216,7 +223,7 @@ def build_distributed_match(Q_shape: Tuple[int, int], mesh: Mesh,
         mappings=P(None, axis_names), feasible=P(None, axis_names),
         fitness=P(None, axis_names), f_star_trace=P(),
         S_star=P(), f_star=P(), S_bar=P(), epochs_run=P(),
-        carry_mapping=P(), carry_feasible=P())
+        carry_mapping=P(), carry_feasible=P(), prune_sweeps=P())
 
     shard_map = get_shard_map()
     fn = shard_map(local_match, mesh=mesh, in_specs=in_specs,
@@ -260,7 +267,7 @@ def build_distributed_match_batch(Q_shape: Tuple[int, int], mesh: Mesh,
             fitness=P(None, axis_names), f_star_trace=P(None, axis_names),
             S_star=shard_b, f_star=shard_b, S_bar=shard_b,
             epochs_run=shard_b, carry_mapping=shard_b,
-            carry_feasible=shard_b)
+            carry_feasible=shard_b, prune_sweeps=shard_b)
         shard_map = get_shard_map()
         fn = shard_map(local_match, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs)
@@ -312,11 +319,12 @@ def build_distributed_revalidate_batch(Q_shape: Tuple[int, int], mesh: Mesh,
         in_specs = (shard_b, shard_b, shard_b,
                     (shard_b, shard_b, shard_b))
         out_specs = dict(mapping=shard_b, ok=shard_b, ok_rebase=shard_b,
-                         fitness=shard_b, S_star=shard_b, S_bar=shard_b)
+                         fitness=shard_b, S_star=shard_b, S_bar=shard_b,
+                         prune_sweeps=shard_b)
     else:
         in_specs = (P(), P(), P(), (P(), P(), P()))
         out_specs = dict(mapping=P(), ok=P(), ok_rebase=P(), fitness=P(),
-                         S_star=P(), S_bar=P())
+                         S_star=P(), S_bar=P(), prune_sweeps=P())
     fn = shard_map(local_reval, mesh=mesh, in_specs=in_specs,
                    out_specs=out_specs)
     return jax.jit(fn)

@@ -32,7 +32,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ops, ref
+from repro.kernels import backend as kernel_backend
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,7 +50,11 @@ class PSOConfig:
     refine_threshold: float = 0.5    # S ≥ τ·rowmax(S) enters the candidate set
     refine_iters: int = 6            # Ullmann pruning sweeps
     quantized: bool = False
-    backend: str = "auto"            # kernels backend
+    backend: str = "auto"            # KernelBackend registry name
+                                     # ("ref" | "pallas" | "interpret");
+                                     # "auto" defers to the
+                                     # REPRO_KERNEL_BACKEND env var, then
+                                     # the platform default
     prune_mask: bool = True          # global Ullmann+injectivity pre-prune
     prune_iters: int = 0             # 0 = iterate the pre-prune to fixpoint
     early_exit: bool = False         # stop epochs once a good mapping exists
@@ -84,11 +88,12 @@ def init_particles(key: jax.Array, num: int, mask: jax.Array):
 
 
 def _fitness(S, Q, G, cfg: PSOConfig):
+    bk = kernel_backend.for_config(cfg)
     if cfg.quantized:
-        Sq = ref.quantize_s(S)
-        f = ops.edge_fitness_quantized(Sq, Q, G, backend=cfg.backend)
+        Sq = bk.quantize_s(S)
+        f = bk.edge_fitness_quantized(Sq, Q, G)
         return f / (255.0 ** 4)   # rescale to float-fitness units
-    return ops.edge_fitness(S, Q, G, backend=cfg.backend)
+    return bk.edge_fitness(S, Q, G)
 
 
 def _maybe_requantize(S, mask, cfg: PSOConfig):
@@ -96,9 +101,10 @@ def _maybe_requantize(S, mask, cfg: PSOConfig):
     accelerator keeping S resident in uint8 between steps)."""
     if not cfg.quantized:
         return S
-    Sq = jax.vmap(ref.row_normalize_quantized, in_axes=(0, None))(
-        ref.quantize_s(S), mask)
-    return ref.dequantize_s(Sq)
+    bk = kernel_backend.for_config(cfg)
+    Sq = jax.vmap(bk.row_normalize_quantized, in_axes=(0, None))(
+        bk.quantize_s(S), mask)
+    return bk.dequantize_s(Sq)
 
 
 def elite_consensus(S_all, f_all, cfg: PSOConfig):
@@ -121,12 +127,13 @@ def elite_consensus(S_all, f_all, cfg: PSOConfig):
 def ullmann_refine_candidates(S, M_proj, Q, G, mask, cfg: PSOConfig):
     """Paper line 20: refine the particle's candidate structure with Ullmann
     pruning sweeps, then re-project. Batched over particles."""
+    bk = kernel_backend.for_config(cfg)
     rowmax = S.max(axis=-1, keepdims=True)
     cand = ((S >= cfg.refine_threshold * rowmax) | (M_proj > 0))
     cand = (cand & (mask[None] > 0)).astype(jnp.uint8)
 
     def sweep(_, c):
-        return ops.ullmann_refine_step(c, Q, G, backend=cfg.backend)
+        return bk.ullmann_refine_step(c, Q, G)
 
     cand = jax.lax.fori_loop(0, cfg.refine_iters, sweep, cand)
     # Re-project S restricted to the surviving candidates (adjacency-
@@ -134,7 +141,7 @@ def ullmann_refine_candidates(S, M_proj, Q, G, mask, cfg: PSOConfig):
     # original projection row (it will simply fail feasibility if truly
     # impossible).
     S_restricted = S * cand.astype(S.dtype)
-    M_hat = jax.vmap(lambda s, c: ref.structured_project(s, Q, G, c))(
+    M_hat = jax.vmap(lambda s, c: bk.structured_project(s, Q, G, c))(
         S_restricted, cand)
     empty_rows = cand.sum(-1, keepdims=True) == 0
     M_hat = jnp.where(empty_rows, M_proj, M_hat)
@@ -144,6 +151,7 @@ def ullmann_refine_candidates(S, M_proj, Q, G, mask, cfg: PSOConfig):
 def run_epoch(carry, key, Q, G, mask, cfg: PSOConfig):
     """One epoch of Algorithm 1 for a local swarm. carry holds the global
     controller state (S*, f*, S̄) persisted across epochs."""
+    bk = kernel_backend.for_config(cfg)
     S_star, f_star, S_bar = carry
     n, m = mask.shape
     if cfg.gumbel_tau > 0:
@@ -163,10 +171,9 @@ def run_epoch(carry, key, Q, G, mask, cfg: PSOConfig):
     def inner(state, k):
         S, V, S_local, f_local, S_star, f_star = state
         r = jax.random.uniform(k, (cfg.num_particles, 3))
-        S, V = ops.pso_update(S, V, S_local, S_star, S_bar, mask, r,
-                              omega=cfg.omega, c1=cfg.c1, c2=cfg.c2,
-                              c3=cfg.c3, v_max=cfg.v_max,
-                              backend=cfg.backend)
+        S, V = bk.pso_update(S, V, S_local, S_star, S_bar, mask, r,
+                             omega=cfg.omega, c1=cfg.c1, c2=cfg.c2,
+                             c3=cfg.c3, v_max=cfg.v_max)
         S = _maybe_requantize(S, mask, cfg)
         f = _fitness(S, Q, G, cfg)
         improved = f > f_local
@@ -201,12 +208,11 @@ def run_epoch(carry, key, Q, G, mask, cfg: PSOConfig):
             + cfg.gumbel_tau * gum
     else:
         S_proj_a = S
-    M_a = jax.vmap(lambda s: ref.structured_project(s, Q, G, mask))(S_proj_a)
-    feas_a = jax.vmap(ref.is_feasible, in_axes=(0, None, None))(M_a, Q, G)
-    M_proj = jax.vmap(lambda s: ops.greedy_project(s, mask,
-                                                   backend=cfg.backend))(S)
+    M_a = jax.vmap(lambda s: bk.structured_project(s, Q, G, mask))(S_proj_a)
+    feas_a = jax.vmap(bk.is_feasible, in_axes=(0, None, None))(M_a, Q, G)
+    M_proj = jax.vmap(lambda s: bk.greedy_project(s, mask))(S)
     M_b, _ = ullmann_refine_candidates(S, M_proj, Q, G, mask, cfg)
-    feas_b = jax.vmap(ref.is_feasible, in_axes=(0, None, None))(M_b, Q, G)
+    feas_b = jax.vmap(bk.is_feasible, in_axes=(0, None, None))(M_b, Q, G)
     M_hat = jnp.where(feas_a[:, None, None], M_a, M_b)
     feasible = feas_a | feas_b
     f_final = _fitness(S, Q, G, cfg)
@@ -242,9 +248,10 @@ def carry_fast_path(carry0, Q, G, mask, cfg: PSOConfig):
     The cold prior (f* = -inf) never fast-paths, so cold calls are
     bit-identical with or without the flag. Returns ``(M_c, ok)``.
     """
+    bk = kernel_backend.for_config(cfg)
     S_star0, f_star0, _ = carry0
-    M_c = ref.structured_project(S_star0, Q, G, mask).astype(jnp.uint8)
-    ok = (ref.is_feasible(M_c, Q, G)
+    M_c = bk.structured_project(S_star0, Q, G, mask).astype(jnp.uint8)
+    ok = (bk.is_feasible(M_c, Q, G)
           & (f_star0 > jnp.float32(-jnp.inf))
           & (f_star0 >= cfg.early_exit_fitness))
     return M_c, ok
@@ -298,13 +305,14 @@ def revalidate_carry(carry0, Q, G, mask, cfg: PSOConfig):
     S_star/S_bar are the rebased controller state (f* intentionally
     omitted: hits store ``fitness``, swarm seeds reset it to -inf).
     """
+    bk = kernel_backend.for_config(cfg)
     S_rb, f_star0, S_bar_rb = rebase_carry(carry0, mask)
-    M_c = ref.structured_project(S_rb, Q, G, mask).astype(jnp.uint8)
+    M_c = bk.structured_project(S_rb, Q, G, mask).astype(jnp.uint8)
     f_c = _fitness(M_c.astype(jnp.float32)[None], Q, G, cfg)[0]
     # ``ok`` gates on the CARRIED f* exactly like the in-kernel
     # ``carry_fast_path``, so Tier-0 batch revalidation and a single
     # warm ``match`` agree at any ``early_exit_fitness`` threshold.
-    ok = (ref.is_feasible(M_c, Q, G)
+    ok = (bk.is_feasible(M_c, Q, G)
           & (f_star0 > jnp.float32(-jnp.inf))
           & (f_star0 >= cfg.early_exit_fitness))
     # Tier 1 must not trust a fitness measured on a different platform
@@ -321,14 +329,18 @@ def _revalidate_batch_body(Qb: jax.Array, Gb: jax.Array, maskb: jax.Array,
     epochs — one projection + feasibility check per problem. Masks are
     pre-pruned exactly as ``_match_batch_body`` does, so the projection
     sees the same candidate sets the swarm that produced the carry saw."""
+    B = maskb.shape[0]
+    bk = kernel_backend.for_config(cfg)
     if cfg.prune_mask:
-        maskb = jax.vmap(
-            lambda mk, Q, G: ref.prune_mask_fixpoint(mk, Q, G,
-                                                     cfg.prune_iters)
-        )(maskb, Qb, Gb).astype(maskb.dtype)
-    return jax.vmap(
+        maskb, prune_sweeps = bk.prune_fixpoint_batch(maskb, Qb, Gb,
+                                                      cfg.prune_iters)
+    else:
+        prune_sweeps = jnp.zeros((B,), jnp.int32)
+    outs = jax.vmap(
         lambda c, Q, G, mk: revalidate_carry(c, Q, G, mk, cfg)
     )(carry0, Qb, Gb, maskb)
+    outs["prune_sweeps"] = prune_sweeps
+    return outs
 
 
 _revalidate_batch_impl = functools.partial(
@@ -414,8 +426,10 @@ def _match_body(key: jax.Array, Q: jax.Array, G: jax.Array, mask: jax.Array,
                 cfg: PSOConfig, carry0):
     n, m = mask.shape
     if cfg.prune_mask:
-        mask = ref.prune_mask_fixpoint(mask, Q, G, cfg.prune_iters
-                                       ).astype(mask.dtype)
+        mask, prune_sweeps = kernel_backend.for_config(cfg).prune_fixpoint(
+            mask, Q, G, cfg.prune_iters)
+    else:
+        prune_sweeps = jnp.int32(0)
     keys = jax.random.split(key, cfg.epochs)
 
     if cfg.early_exit and cfg.carry_fastpath:
@@ -437,6 +451,7 @@ def _match_body(key: jax.Array, Q: jax.Array, G: jax.Array, mask: jax.Array,
     outs["epochs_run"] = epochs_run
     outs["carry_mapping"] = M_c
     outs["carry_feasible"] = carry_ok
+    outs["prune_sweeps"] = prune_sweeps
     return outs
 
 
@@ -511,11 +526,12 @@ def _match_batch_body(keys: jax.Array, Qb: jax.Array, Gb: jax.Array,
     ``match(keys[b], ...)`` would.
     """
     B, n, m = maskb.shape
+    bk = kernel_backend.for_config(cfg)
     if cfg.prune_mask:
-        maskb = jax.vmap(
-            lambda mk, Q, G: ref.prune_mask_fixpoint(mk, Q, G,
-                                                     cfg.prune_iters)
-        )(maskb, Qb, Gb).astype(maskb.dtype)
+        maskb, prune_sweeps = bk.prune_fixpoint_batch(maskb, Qb, Gb,
+                                                      cfg.prune_iters)
+    else:
+        prune_sweeps = jnp.zeros((B,), jnp.int32)
     # (B, T) epoch keys -> (T, B) for the scan
     epoch_keys = jax.vmap(lambda k: jax.random.split(k, cfg.epochs))(keys)
     epoch_keys = jnp.swapaxes(epoch_keys, 0, 1)
@@ -544,6 +560,7 @@ def _match_batch_body(keys: jax.Array, Qb: jax.Array, Gb: jax.Array,
     outs["epochs_run"] = epochs_run
     outs["carry_mapping"] = M_c
     outs["carry_feasible"] = carry_ok
+    outs["prune_sweeps"] = prune_sweeps
     return outs
 
 

@@ -128,6 +128,8 @@ class ServiceStats:
                                      # (0 epochs: Tier 0, Tier 1, or the
                                      # in-kernel fast path)
     pad_slots_frozen: int = 0        # pad slots pre-finished from epoch 0
+    prune_problems: int = 0          # real problems that ran the pre-prune
+    prune_sweeps: int = 0            # total fused prune iterations executed
     sim_lookups: int = 0             # similarity-store nearest() queries
     sim_neighbor_hits: int = 0       # queries that found a neighbour carry
     sim_evictions: int = 0
@@ -151,6 +153,13 @@ class ServiceStats:
     def revalidated_rate(self) -> float:
         """Fraction of calls served without any swarm epoch (all tiers)."""
         return self.carry_fastpath_hits / max(self.calls, 1)
+
+    @property
+    def avg_prune_sweeps(self) -> float:
+        """Mean fused pre-prune iterations per pruned problem — the
+        prune-latency observable the scheduler's analytic cost model is
+        calibrated against."""
+        return self.prune_sweeps / max(self.prune_problems, 1)
 
     @property
     def batch_occupancy(self) -> float:
@@ -218,16 +227,34 @@ class CarryStore:
       produced on. ``nearest`` returns the stored carry whose free-engine
       bitmask overlaps the query's the most (ties go to the most recently
       stored), feeding Tier 1 rebases under fragmentation drift.
+
+    ``nearest`` probes a **popcount-bucketed index**: entries of one
+    (query digest, bucket) group are binned by the popcount of their
+    free-engine bitmask, and bins are visited in decreasing order of the
+    best overlap they could possibly hold (``min(pop, query_pop)``),
+    stopping as soon as the bound cannot beat the best hit found — at
+    thousands of stored platform states the probe touches a handful of
+    bins instead of scanning the store. The exhaustive linear scan is
+    kept as ``_nearest_linear`` (``sim_index=False`` fallback, and the
+    oracle the index is property-tested against).
     """
 
     def __init__(self, capacity: int, sim_capacity: int,
-                 stats: ServiceStats):
+                 stats: ServiceStats, sim_index: bool = True):
         self.capacity = max(int(capacity), 1)
         self.sim_capacity = max(int(sim_capacity), 1)
         self.stats = stats
+        self.sim_index = bool(sim_index)
         self._exact: "OrderedDict[Tuple, tuple]" = OrderedDict()
         self._sim: "OrderedDict[Tuple, Tuple[np.ndarray, tuple]]" = \
             OrderedDict()
+        # recency sequence per similarity key (== iteration order of
+        # ``_sim``): the index's explicit most-recent-wins tiebreaker
+        self._sim_seq: Dict[Tuple, int] = {}
+        self._seq = 0
+        # (qdigest, bucket, bit-length) -> {popcount: OrderedDict[sig]}
+        self._sim_buckets: Dict[Tuple, Dict[int, "OrderedDict[bytes, None]"]] \
+            = {}
 
     def __len__(self) -> int:
         return len(self._exact)
@@ -239,6 +266,8 @@ class CarryStore:
     def clear(self) -> None:
         self._exact.clear()
         self._sim.clear()
+        self._sim_seq.clear()
+        self._sim_buckets.clear()
 
     # -- exact tier --------------------------------------------------------
 
@@ -264,11 +293,39 @@ class CarryStore:
 
     def put_similar(self, qdigest: str, bucket: Tuple[int, int],
                     sig: bytes, carry) -> None:
-        self._sim[(qdigest, bucket, sig)] = (self._bits(sig), carry)
-        self._sim.move_to_end((qdigest, bucket, sig))
+        key = (qdigest, bucket, sig)
+        bits = self._bits(sig)
+        fresh = key not in self._sim
+        self._sim[key] = (bits, carry)
+        self._sim.move_to_end(key)
+        self._seq += 1
+        self._sim_seq[key] = self._seq
+        if fresh:
+            group = self._sim_buckets.setdefault(
+                (qdigest, bucket, bits.shape[0]), {})
+            group.setdefault(int(bits.sum()), OrderedDict())[sig] = None
         while len(self._sim) > self.sim_capacity:
-            self._sim.popitem(last=False)
+            old_key, (old_bits, _) = self._sim.popitem(last=False)
+            self._drop_sim_key(old_key, old_bits)
             self.stats.sim_evictions += 1
+
+    def _drop_sim_key(self, key: Tuple, bits: np.ndarray) -> None:
+        """Remove an evicted similarity entry from the popcount index
+        (``bits``: the entry's already-unpacked bit vector)."""
+        qd, bk, sig = key
+        self._sim_seq.pop(key, None)
+        gkey = (qd, bk, bits.shape[0])
+        group = self._sim_buckets.get(gkey)
+        if group is None:
+            return
+        pc = int(bits.sum())
+        bin_ = group.get(pc)
+        if bin_ is not None:
+            bin_.pop(sig, None)
+            if not bin_:
+                del group[pc]
+        if not group:
+            del self._sim_buckets[gkey]
 
     def nearest(self, qdigest: str, bucket: Tuple[int, int], sig: bytes,
                 exclude_sig: Optional[bytes] = None
@@ -278,8 +335,49 @@ class CarryStore:
         Nearest = max popcount of the AND of the free-engine bitmasks;
         ties broken toward the smaller symmetric difference, then toward
         the most recently stored entry. Returns ``(stored_sig, carry)``
-        or None when no same-workload entry overlaps at all.
+        or None when no same-workload entry overlaps at all. Served from
+        the popcount-bucketed index (identical results to
+        ``_nearest_linear`` — property-tested) unless ``sim_index`` is
+        off.
         """
+        if not self.sim_index:
+            return self._nearest_linear(qdigest, bucket, sig, exclude_sig)
+        bits = self._bits(sig)
+        qpop = int(bits.sum())
+        group = self._sim_buckets.get((qdigest, bucket, bits.shape[0]))
+        if not group or qpop == 0:
+            return None
+
+        def upper_bound(pc: int) -> Tuple[int, int]:
+            # best (overlap, -symdiff) any popcount-pc bitmask can score
+            ov = min(pc, qpop)
+            return ov, -(pc + qpop - 2 * ov)
+
+        best = None
+        best_score = (0, float("-inf"), -1)     # (overlap, -symdiff, seq)
+        for pc in sorted(group, key=upper_bound, reverse=True):
+            ub = upper_bound(pc)
+            if ub[0] <= 0 or ub < (best_score[0], best_score[1]):
+                break        # bins are bound-sorted: nothing below can win
+            for s in group[pc]:
+                if s == exclude_sig:
+                    continue
+                key = (qdigest, bucket, s)
+                b, carry = self._sim[key]
+                overlap = int((b & bits).sum())
+                if overlap <= 0:
+                    continue
+                score = (overlap, -int((b ^ bits).sum()),
+                         self._sim_seq[key])
+                if score > best_score:
+                    best_score = score
+                    best = (s, carry)
+        return best
+
+    def _nearest_linear(self, qdigest: str, bucket: Tuple[int, int],
+                        sig: bytes, exclude_sig: Optional[bytes] = None
+                        ) -> Optional[Tuple[bytes, tuple]]:
+        """Exhaustive-scan fallback (and the index's test oracle)."""
         bits = self._bits(sig)
         best = None
         best_score = (0, float("-inf"))
@@ -316,7 +414,7 @@ class MatcherService:
                  n_multiple: int = 8, m_multiple: int = 16,
                  batch_classes: Sequence[int] = (1, 2, 4, 8),
                  tiered: bool = True, similarity: bool = True,
-                 sim_capacity: int = 128):
+                 sim_capacity: int = 128, sim_index: bool = True):
         cfg = cfg or pso.PSOConfig()
         if early_exit and not cfg.early_exit:
             cfg = cfg.replace(early_exit=True)
@@ -332,7 +430,8 @@ class MatcherService:
         self.tiered = tiered
         self.similarity = similarity
         self.stats = ServiceStats()
-        self._carries = CarryStore(warm_capacity, sim_capacity, self.stats)
+        self._carries = CarryStore(warm_capacity, sim_capacity, self.stats,
+                                   sim_index=sim_index)
         self._compiled: "OrderedDict[Tuple, object]" = OrderedDict()
         self._pending: List[_PendingRequest] = []
 
@@ -490,6 +589,13 @@ class MatcherService:
                                engine_sig=engine_sig, qdigest=qdigest,
                                cdigest=h.hexdigest())
 
+    def _note_prune(self, problems: int, sweeps: int) -> None:
+        """Account the fused pre-prune work a launch reported (the
+        ``prune_sweeps`` observable of the match/revalidate kernels)."""
+        if self.cfg.prune_mask and problems > 0:
+            self.stats.prune_problems += problems
+            self.stats.prune_sweeps += int(sweeps)
+
     def _tiers_active(self) -> bool:
         """Tier 0/1 only exist when the kernel fast path they batch is on
         (otherwise serving at 0 epochs would change semantics)."""
@@ -565,6 +671,7 @@ class MatcherService:
                                     for f in dataclasses.fields(MatchResult)})
         self._store_result_carries(req, warm_key, res)
         self.stats.epochs_run += res.epochs_run
+        self._note_prune(1, res.prune_sweeps)
         if res.found:
             self.stats.found += 1
         if res.carry_verified:
@@ -758,6 +865,8 @@ class MatcherService:
         fits = np.asarray(outs["fitness"])
         S_rb = np.asarray(outs["S_star"])
         S_bar_rb = np.asarray(outs["S_bar"])
+        sweeps = np.asarray(outs["prune_sweeps"]).reshape(-1)
+        self._note_prune(B, int(sweeps[:B].sum()))
         done = time.perf_counter()
 
         tstats.launches += 1
@@ -785,12 +894,13 @@ class MatcherService:
                                               it.req.engine_sig, carry)
             it.result = self._revalidated_result(
                 it, maps[j], f_res, carry, tier=tier, batch=B,
-                compile_hit=compile_hit)
+                compile_hit=compile_hit, prune_sweeps=int(sweeps[j]))
         return misses
 
     def _revalidated_result(self, item: _PipelineItem, M_c: np.ndarray,
                             f_res: float, carry, *, tier: int, batch: int,
-                            compile_hit: bool) -> ServiceMatchResult:
+                            compile_hit: bool, prune_sweeps: int = 0
+                            ) -> ServiceMatchResult:
         """Host-side result for a request served by revalidation alone —
         the 0-epoch equivalent of what ``collect_result`` produces when
         the in-kernel fast path skipped every epoch."""
@@ -809,6 +919,7 @@ class MatcherService:
             all_feasible=np.zeros((0,), bool),
             all_fitness=np.zeros((0,), np.float32),
             carry=carry, epochs_run=0, carry_verified=True,
+            prune_sweeps=prune_sweeps,
             bucket=req.bucket, compile_cache_hit=compile_hit,
             warm_hit=item.warm_hit, batch_size=batch,
             coalesced=batch > 1, tier=tier)
@@ -901,6 +1012,7 @@ class MatcherService:
                    for f in dataclasses.fields(MatchResult)})
             self._store_result_carries(it.req, it.warm_key, res)
             self.stats.epochs_run += res.epochs_run
+            self._note_prune(1, res.prune_sweeps)
             if res.found:
                 self.stats.found += 1
                 self.stats.tier2.hits += 1
@@ -952,6 +1064,9 @@ class MatcherService:
             "carry_fastpath_hits": s.carry_fastpath_hits,
             "revalidated_rate": s.revalidated_rate,
             "pad_slots_frozen": s.pad_slots_frozen,
+            "prune_problems": s.prune_problems,
+            "prune_sweeps": s.prune_sweeps,
+            "avg_prune_sweeps": s.avg_prune_sweeps,
             "sim_lookups": s.sim_lookups,
             "sim_neighbor_hits": s.sim_neighbor_hits,
             "sim_evictions": s.sim_evictions,

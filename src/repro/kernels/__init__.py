@@ -1,3 +1,24 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Compute kernels: Pallas TPU implementations + pure-jnp oracles behind
+one pluggable backend registry.
+
+Core code selects a suite via :func:`get_backend` /
+:func:`for_config` (precedence: explicit arg > ``PSOConfig.backend`` >
+``REPRO_KERNEL_BACKEND`` env var > platform default) and calls kernel
+entry points on it — see ``kernels/backend.py`` for how to register a
+new kernel or a custom suite.
+"""
+from repro.kernels.backend import (ENV_VAR, KERNEL_NAMES, KernelBackend,
+                                   for_config, get_backend,
+                                   register_backend, registered_backends,
+                                   resolve_backend_name)
+
+__all__ = [
+    "ENV_VAR",
+    "KERNEL_NAMES",
+    "KernelBackend",
+    "for_config",
+    "get_backend",
+    "register_backend",
+    "registered_backends",
+    "resolve_backend_name",
+]

@@ -23,6 +23,7 @@ from repro.kernels.argmax_project import (greedy_project_pallas,
                                           masked_argmax_pallas)
 from repro.kernels.pso_fitness import (edge_fitness_pallas,
                                        edge_fitness_quantized_pallas)
+from repro.kernels.prune_fixpoint import prune_fixpoint_pallas
 from repro.kernels.pso_update import pso_update_pallas
 from repro.kernels.ullmann_refine import ullmann_refine_step_pallas
 
@@ -106,6 +107,34 @@ def ullmann_refine_step(M: jax.Array, Q: jax.Array, G: jax.Array,
     out = ullmann_refine_step_pallas(Mp, Qp, Gp,
                                      interpret=(backend == "interpret"))
     return out[:, :n, :m]
+
+
+@functools.partial(jax.jit, static_argnames=("max_iters", "backend"))
+def prune_fixpoint(maskb: jax.Array, Qb: jax.Array, Gb: jax.Array,
+                   max_iters: int = 0, backend: str = "auto"):
+    """Fused global pre-prune to fixpoint, batched over problems.
+
+    ``maskb``: (B, n, m) compatibility masks; ``Qb``: (B, n, n);
+    ``Gb``: (B, m, m) — each problem prunes against its OWN graphs (the
+    batched matcher's layout; broadcast Q/G for the shared case). One
+    fused iteration = Ullmann refinement sweep + injectivity propagation;
+    ``max_iters=0`` iterates to convergence. Returns ``(pruned maskb,
+    sweeps (B,) int32)`` where ``sweeps`` counts the fused iterations
+    executed (the prune-latency observable).
+    """
+    backend = resolve_backend(backend)
+    if backend == "ref":
+        return jax.vmap(
+            lambda mk, Q, G: ref.prune_fixpoint_count(mk, Q, G, max_iters)
+        )(maskb, Qb, Gb)
+    B, n, m = maskb.shape
+    np_, mp = _round_up(n), _round_up(m)
+    Mp = _pad_to(maskb, (np_, mp))
+    Qp = _pad_to(Qb, (np_, np_))
+    Gp = _pad_to(Gb, (mp, mp))
+    out, sweeps = prune_fixpoint_pallas(Mp, Qp, Gp, max_iters=max_iters,
+                                        interpret=(backend == "interpret"))
+    return out[:, :n, :m], sweeps
 
 
 # ---------------------------------------------------------------------------

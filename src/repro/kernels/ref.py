@@ -140,6 +140,42 @@ def prune_mask_fixpoint(mask: jax.Array, Q: jax.Array, G: jax.Array,
         mask, max_iters)
 
 
+def prune_fixpoint_count(mask: jax.Array, Q: jax.Array, G: jax.Array,
+                         max_iters: int = 0):
+    """``prune_mask_fixpoint`` with an explicit convergence counter.
+
+    Semantic twin of the fused Pallas ``prune_fixpoint`` kernel: one fused
+    iteration = one Ullmann refinement sweep followed by one injectivity-
+    propagation step, iterated while anything changes and the sweep budget
+    holds (``max_iters=0``: until convergence, bounded by the candidate
+    count — each productive iteration removes ≥ 1 candidate). The pruned
+    mask is identical to ``prune_mask_fixpoint``'s (a converged mask is a
+    fixpoint of the step, so stopping early never changes the result).
+
+    Returns ``(pruned_mask, sweeps)`` with ``sweeps`` the int32 number of
+    fused iterations executed (including the final no-change one) — the
+    prune-latency observable the scheduler's cost accounting consumes.
+    """
+    n, m = mask.shape
+    bound = max_iters if max_iters and max_iters > 0 else n * m + 1
+
+    def step(mk):
+        return injectivity_prune(ullmann_refine_step(mk, Q, G))
+
+    def cond(state):
+        _, changed, it = state
+        return changed & (it < bound)
+
+    def body(state):
+        mk, _, it = state
+        mk2 = step(mk)
+        return mk2, jnp.any(mk2 != mk), it + jnp.int32(1)
+
+    out, _, sweeps = jax.lax.while_loop(
+        cond, body, (mask, jnp.bool_(True), jnp.int32(0)))
+    return out, sweeps
+
+
 def is_feasible(M: jax.Array, Q: jax.Array, G: jax.Array) -> jax.Array:
     """Feasibility: M is a (partial-)injective 0/1 assignment matrix with one
     candidate per row, and M G Mᵀ covers Q (paper: "checking whether M̂ G M̂ᵀ

@@ -68,6 +68,14 @@ def pipeline_tier_rates(result: SimResult) -> Dict[str, float]:
     calls = ms.get("calls", 0)
     out["revalidated_rate"] = ms.get("revalidated_rate", 0.0)
     out["calls"] = calls
+    # fused pre-prune accounting: real sweeps observed by the service and
+    # the analytic latency the scheduler charged Tier-2 decisions for it
+    out["avg_prune_sweeps"] = ms.get("avg_prune_sweeps", 0.0)
+    out["sched_prune_launches"] = ms.get("sched_prune_launches", 0)
+    out["sched_prune_wall_s"] = ms.get("sched_prune_wall_s", 0.0)
+    # Tier-1 calibration: observed rebase outcomes feeding the predictor
+    out["sched_tier1_calib_hits"] = ms.get("sched_tier1_calib_hits", 0)
+    out["sched_tier1_calib_trials"] = ms.get("sched_tier1_calib_trials", 0)
     return out
 
 

@@ -158,6 +158,14 @@ class IMMSchedScheduler(SchedulerBase):
     _SIG_MEMORY = 64                 # platform states remembered per task
     _REBASE_OVERLAP = 0.5            # min engine-set overlap for a Tier-1
                                      # rebase prediction
+    _T1_PRIOR = (2, 3)               # pseudo-counts behind the analytic
+                                     # ≥50%-overlap heuristic (2/3 prior
+                                     # success); real-mode outcomes shift
+                                     # the posterior per (workload,
+                                     # engine-signature) bucket
+    _T1_PC_BUCKET = 8                # popcount band width of the bucket
+    _PRUNE_SWEEPS = 4                # assumed fused pre-prune iterations
+                                     # until real launches calibrate it
 
     def __init__(self, quantized: bool = True):
         self.quantized = quantized
@@ -172,11 +180,20 @@ class IMMSchedScheduler(SchedulerBase):
         self._tier_decisions = {"tier0": 0, "tier1": 0, "tier2": 0}
         # per workload: LRU of seen platform states, sig → unpacked bits
         self._state_index: Dict[str, "OrderedDict[bytes, np.ndarray]"] = {}
+        # observed Tier-1 rebase outcomes per (workload, popcount band of
+        # the engine signature): [successes, trials]
+        self._tier1_obs: Dict[tuple, List[int]] = {}
+        self._prune_stats = {"launches": 0, "wall_s": 0.0, "energy_j": 0.0}
 
     def matcher_stats(self) -> Dict[str, float]:
         d = self._service.stats_dict() if self._service else {}
         for k, v in getattr(self, "_tier_decisions", {}).items():
             d[f"sched_{k}_decisions"] = v
+        obs = getattr(self, "_tier1_obs", {})
+        d["sched_tier1_calib_hits"] = sum(v[0] for v in obs.values())
+        d["sched_tier1_calib_trials"] = sum(v[1] for v in obs.values())
+        for k, v in getattr(self, "_prune_stats", {}).items():
+            d[f"sched_prune_{k}"] = v
         return d
 
     # -- warm-state predictor (mirrors the service carry store) ----------
@@ -185,6 +202,50 @@ class IMMSchedScheduler(SchedulerBase):
         free = set(self._free_engines(sim, tasks))
         return free_engine_signature(
             [e in free for e in range(sim.platform.engines)])
+
+    def _tier1_bucket(self, name: str, sig: bytes) -> tuple:
+        """Calibration bucket: workload × popcount band of the free-engine
+        signature (platform states with similar free-set sizes fail or
+        succeed rebases together under fragmentation churn)."""
+        pc = int(signature_bits(sig).sum())
+        return (name, pc // self._T1_PC_BUCKET)
+
+    def _tier1_success_prob(self, name: str, sig: bytes) -> float:
+        """Posterior Tier-1 rebase success probability for this bucket:
+        observed real-mode outcomes blended with the pseudo-count prior
+        the analytic ≥50%-overlap heuristic implies. With no observations
+        this is the prior (> 0.5), so analytic-only runs predict exactly
+        as before calibration existed."""
+        h, t = self._tier1_obs.get(self._tier1_bucket(name, sig), (0, 0))
+        ph, pt = self._T1_PRIOR
+        return (h + ph) / (t + pt)
+
+    def _note_tier1_outcome(self, name: str, sig: bytes, ok: bool) -> None:
+        """Record a real-mode rebase outcome for a predicted-Tier-1
+        decision (served at tier ≤ 1 = the rebase verified)."""
+        key = self._tier1_bucket(name, sig)
+        h, t = self._tier1_obs.get(key, (0, 0))
+        self._tier1_obs[key] = [h + (1 if ok else 0), t + 1]
+
+    def _calibrate_tier1(self, preds, raws) -> None:
+        """Update the rebase posterior from a real-mode launch.
+
+        Predicted-Tier-1 decisions record their outcome directly. A
+        predicted-Tier-2 decision that the pipeline actually served by a
+        *verified rebase* (``raw.tier == 1``) records a success too —
+        without it a bucket whose posterior once dropped below 0.5 would
+        be predicted Tier-2 forever (outcomes only flow from Tier-1
+        predictions) even while the real pipeline keeps rebasing it
+        fine. Tier-0 serves and cold misses are neutral: neither says
+        anything about rebase success."""
+        for (name, sig, ptier), raw in zip(preds, raws):
+            if raw is None:
+                continue
+            if ptier == 1:
+                self._note_tier1_outcome(name, sig,
+                                         raw.found and raw.tier <= 1)
+            elif ptier == 2 and raw.found and raw.tier == 1:
+                self._note_tier1_outcome(name, sig, True)
 
     def _predict_tier(self, name: str, sig: bytes) -> int:
         sigs = self._state_index.get(name)
@@ -197,7 +258,13 @@ class IMMSchedScheduler(SchedulerBase):
         for b in sigs.values():         # bits decoded once, at note time
             if b.shape == bits.shape \
                     and int((b & bits).sum()) / denom >= self._REBASE_OVERLAP:
-                return 1
+                # overlap alone over-promises under churn: gate the Tier-1
+                # prediction on the calibrated success posterior so a
+                # bucket whose rebases keep failing re-verification is
+                # charged (and predicted) as a swarm decision again
+                if self._tier1_success_prob(name, sig) >= 0.5:
+                    return 1
+                return 2
         return 2
 
     def _note_state(self, name: str, sig: bytes) -> None:
@@ -207,14 +274,31 @@ class IMMSchedScheduler(SchedulerBase):
         while len(d) > self._SIG_MEMORY:
             d.popitem(last=False)
 
+    def _prune_cost(self, sim, n: int, m: int, engines: int):
+        """Latency/energy of the fused pre-prune a Tier-2 (cold/swarm)
+        decision pays before its first epoch. The assumed sweep count is
+        calibrated online against the real launches' ``prune_sweeps``
+        observable once any are available; charges accumulate in
+        ``sched_prune_*`` stats."""
+        sweeps = self._PRUNE_SWEEPS
+        if self._service is not None \
+                and self._service.stats.prune_problems > 0:
+            sweeps = max(1, round(self._service.stats.avg_prune_sweeps))
+        st, se = sim.cost.sched_immsched_prune(n, m, engines, sweeps=sweeps)
+        self._prune_stats["launches"] += 1
+        self._prune_stats["wall_s"] += st
+        self._prune_stats["energy_j"] += se
+        return st, se
+
     def _charge_tiers(self, sim, normal, sig, decision) -> None:
         """Per-tier latency for a burst: one revalidation launch covers
         the warm tasks (Tier 0/1); a swarm launch sized to the
-        predicted-miss (hard) subset is charged only to those tasks — an
-        easy task in a mixed burst no longer waits out the hard
-        neighbours' swarm. A fully cold burst issues NO revalidation
-        launch (the real pipeline skips Tier 0/1 when nothing is stored),
-        so it is charged the swarm alone."""
+        predicted-miss (hard) subset — plus the fused mask pre-prune that
+        precedes any swarm — is charged only to those tasks; an easy task
+        in a mixed burst no longer waits out the hard neighbours' swarm.
+        A fully cold burst issues NO revalidation launch (the real
+        pipeline skips Tier 0/1 when nothing is stored), so it is charged
+        prune + swarm alone."""
         m = sim.platform.engines
         tiers = {t.spec.task_id: self._predict_tier(t.spec.name, sig)
                  for t in normal}
@@ -229,9 +313,12 @@ class IMMSchedScheduler(SchedulerBase):
         st_s = se_s = 0.0
         if hard:
             n_hard = max(self._window_tiles(sim, t) for t in hard)
+            eng = max(min(n_hard, m) // 2, 1)
+            st_p, se_p = self._prune_cost(sim, min(n_hard, 64), m, eng)
             st_s, se_s = sim.cost.sched_immsched(
-                min(n_hard, 64), m, sim.cfg.pso_cfg,
-                max(min(n_hard, m) // 2, 1))
+                min(n_hard, 64), m, sim.cfg.pso_cfg, eng)
+            st_s += st_p
+            se_s += se_p
         for t in normal:
             tier = tiers[t.spec.task_id]
             self._tier_decisions[f"tier{tier}"] += 1
@@ -276,6 +363,7 @@ class IMMSchedScheduler(SchedulerBase):
         free = self._free_engines(sim, tasks)
         preempted: set = set()
         grants = []          # (urgent, engines, freed_engines, need)
+        preds = []           # (name, sig, predicted tier) per grant
         st_batch = se_batch = 0.0
         for urgent in urgent_list:
             live = [r for r in running if r.task_id not in preempted]
@@ -297,12 +385,17 @@ class IMMSchedScheduler(SchedulerBase):
             tier = self._predict_tier(urgent.spec.name, sig)
             self._tier_decisions[f"tier{tier}"] += 1
             self._note_state(urgent.spec.name, sig)
+            preds.append((urgent.spec.name, sig, tier))
             if tier < 2:
                 st, se = sim.cost.sched_immsched_revalidate(
                     min(n, 64), m, max(len(engines), 1))
             else:
+                st_p, se_p = self._prune_cost(sim, min(n, 64), m,
+                                              max(len(engines), 1))
                 st, se = sim.cost.sched_immsched(
                     min(n, 64), m, sim.cfg.pso_cfg, max(len(engines), 1))
+                st += st_p
+                se += se_p
             # one batched launch: latency = slowest problem in the batch,
             # energy = one swarm (the problems share it), not K swarms
             st_batch = max(st_batch, st)
@@ -313,12 +406,13 @@ class IMMSchedScheduler(SchedulerBase):
             free = [e for e in dec.freed_engines if e not in set(engines)]
             grants.append((urgent, engines, dec.freed_engines, need))
         if sim.cfg.matcher_mode == "real":
-            mapped = self._real_match_batch(
+            mapped, raws = self._real_match_batch(
                 sim, [(u, freed) for u, _, freed, _ in grants])
             for i, (urgent, engines, freed, need) in enumerate(grants):
                 if mapped[i]:
                     grants[i] = (urgent, mapped[i][:max(need, 1)],
                                  freed, need)
+            self._calibrate_tier1(preds, raws)
         # deconflict: a real-match maps over its task's FULL freed set, so
         # a later grant may land on engines an earlier task already took —
         # reservations must stay disjoint within the burst. A fully
@@ -337,10 +431,12 @@ class IMMSchedScheduler(SchedulerBase):
             self._reserved[urgent.spec.task_id] = engines
         decision["energy"] += se_batch
 
-    def _real_match_batch(self, sim, pairs) -> List[Optional[List[int]]]:
+    def _real_match_batch(self, sim, pairs):
         """Run the burst's matchings as one coalesced service launch.
         ``pairs``: (urgent_task, freed_engine_list) per urgent arrival.
-        Returns per-task engine lists (None where no match)."""
+        Returns ``(engines, results)``: per-task engine lists (None where
+        no match) and the raw per-task ``ServiceMatchResult`` (None where
+        no problem was launched) for tier-outcome calibration."""
         problems, wkeys, sigs, targets, slots = [], [], [], [], []
         for urgent, freed in pairs:
             pd = self._pdag(sim, urgent)
@@ -365,14 +461,16 @@ class IMMSchedScheduler(SchedulerBase):
                                             engine_sigs=sigs)
                    if problems else [])
         out: List[Optional[List[int]]] = []
+        raws = []
         for slot in slots:
+            raws.append(None if slot is None else results[slot])
             if slot is None or not results[slot].found:
                 out.append(None)
                 continue
             engine_ids = targets[slot].weights.astype(int)
             _, cols = np.where(results[slot].mapping)
             out.append([int(engine_ids[c]) for c in cols])
-        return out
+        return out, raws
 
 
 class IsoSchedScheduler(SchedulerBase):

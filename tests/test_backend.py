@@ -1,0 +1,237 @@
+"""Kernel-backend layer: registry/selection precedence, and the parity
+sweep — every kernel registered in ``KERNEL_NAMES`` must agree between the
+Pallas suite (interpret mode) and the jnp oracle suite across shapes ×
+mask dtypes, bitwise for integer outputs and allclose for float ones.
+The sweep is driven off the registry itself: registering a kernel without
+a parity case fails ``test_every_registered_kernel_has_parity_case``."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pso
+from repro.kernels import (ENV_VAR, KERNEL_NAMES, KernelBackend,
+                           get_backend, register_backend,
+                           registered_backends, resolve_backend_name)
+from repro.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+SHAPES = [(1, 8, 16), (2, 40, 72)]
+MASK_DTYPES = [jnp.uint8, jnp.int32]
+
+
+class _Problem:
+    """One random matching instance with planted singleton rows (so the
+    injectivity half of the fused prune has work to do)."""
+
+    def __init__(self, seed, B, n, m, mask_dtype):
+        key = jax.random.PRNGKey(seed)
+        k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+        S = jax.random.uniform(k1, (B, n, m))
+        self.S = S / S.sum(-1, keepdims=True)
+        self.S_q = ref.quantize_s(self.S)
+        Q = jax.random.bernoulli(k2, 0.3, (n, n)).astype(jnp.uint8)
+        self.Q = jnp.triu(Q, k=1)                      # DAG
+        G = jax.random.bernoulli(k3, 0.4, (m, m)).astype(jnp.uint8)
+        self.G = jnp.triu(G, k=1)
+        mask = jax.random.bernoulli(k4, 0.8, (n, m))
+        mask = mask.at[:, 0].set(True)                 # no empty rows
+        # plant singletons: rows 0 and n//2 keep exactly one candidate,
+        # claiming their columns from every other row on the first
+        # injectivity propagation
+        for i, j in ((0, 1), (n // 2, min(3, m - 1))):
+            mask = mask.at[i, :].set(False).at[i, j].set(True)
+        self.mask = mask.astype(mask_dtype)
+        self.Mb = jnp.broadcast_to(self.mask, (B, n, m)
+                                   ).astype(mask_dtype)
+        self.V = jax.random.normal(k5, (B, n, m)) * 0.1
+        self.r = jax.random.uniform(k1, (B, 3))
+        # a projected assignment for the feasibility kernel
+        self.M_hat = ref.greedy_project(self.S[0], self.mask)
+
+
+_HYPER = dict(omega=0.7, c1=1.4, c2=1.4, c3=0.6, v_max=0.5)
+
+# Every registered kernel gets one invocation recipe; outputs are compared
+# leaf-by-leaf across backends.
+KERNEL_CASES = {
+    "edge_fitness": lambda bk, p: bk.edge_fitness(p.S, p.Q, p.G),
+    "edge_fitness_quantized":
+        lambda bk, p: bk.edge_fitness_quantized(p.S_q, p.Q, p.G),
+    "pso_update": lambda bk, p: bk.pso_update(
+        p.S, p.V, p.S, p.S[0], p.S.mean(0), p.mask, p.r, **_HYPER),
+    "ullmann_refine_step":
+        lambda bk, p: bk.ullmann_refine_step(p.Mb, p.Q, p.G),
+    "greedy_project": lambda bk, p: bk.greedy_project(p.S[0], p.mask),
+    "masked_argmax": lambda bk, p: bk.masked_argmax(p.S[0], p.mask),
+    "structured_project":
+        lambda bk, p: bk.structured_project(p.S[0], p.Q, p.G, p.mask),
+    "injectivity_prune": lambda bk, p: bk.injectivity_prune(p.mask),
+    "is_feasible": lambda bk, p: bk.is_feasible(p.M_hat, p.Q, p.G),
+    "prune_fixpoint": lambda bk, p: bk.prune_fixpoint(p.mask, p.Q, p.G),
+    "prune_fixpoint_batch":
+        lambda bk, p: bk.prune_fixpoint_batch(p.Mb, p.Q[None].repeat(
+            p.Mb.shape[0], 0), p.G[None].repeat(p.Mb.shape[0], 0)),
+    "quantize_s": lambda bk, p: bk.quantize_s(p.S),
+    "dequantize_s": lambda bk, p: bk.dequantize_s(p.S_q),
+    "row_normalize_quantized":
+        lambda bk, p: bk.row_normalize_quantized(p.S_q[0], p.mask),
+}
+
+
+def _assert_leaves_match(got, want):
+    got_l = jax.tree_util.tree_leaves(got)
+    want_l = jax.tree_util.tree_leaves(want)
+    assert len(got_l) == len(want_l)
+    for g, w in zip(got_l, want_l):
+        g, w = np.asarray(g), np.asarray(w)
+        assert g.shape == w.shape
+        if np.issubdtype(w.dtype, np.floating):
+            np.testing.assert_allclose(g, w, rtol=1e-5, atol=1e-4)
+        else:
+            np.testing.assert_array_equal(g, w)
+
+
+def test_every_registered_kernel_has_parity_case():
+    assert set(KERNEL_CASES) == set(KERNEL_NAMES)
+    # and every backend actually provides every entry point
+    for name in registered_backends():
+        bk = get_backend(name)
+        for k in KERNEL_NAMES:
+            assert callable(getattr(bk, k))
+
+
+@pytest.mark.parametrize("mask_dtype", MASK_DTYPES)
+@pytest.mark.parametrize("B,n,m", SHAPES)
+@pytest.mark.parametrize("kernel", sorted(KERNEL_CASES))
+def test_backend_parity(kernel, B, n, m, mask_dtype):
+    p = _Problem(hash((kernel, B, n, m)) % (2 ** 31), B, n, m, mask_dtype)
+    got = KERNEL_CASES[kernel](get_backend("interpret"), p)
+    want = KERNEL_CASES[kernel](get_backend("ref"), p)
+    _assert_leaves_match(got, want)
+
+
+# ---------------------- fused prune semantics ------------------------------
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_fused_prune_matches_legacy_alternation(backend):
+    """The fused kernel must reproduce the original loose-jnp fixpoint
+    (refine sweep alternating with injectivity prune) exactly, on a mask
+    with planted singletons, and report ≥ 1 sweep."""
+    p = _Problem(7, 1, 12, 20, jnp.uint8)
+    legacy = ref.prune_mask_fixpoint(p.mask, p.Q, p.G)
+    got, sweeps = get_backend(backend).prune_fixpoint(p.mask, p.Q, p.G)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(legacy))
+    assert int(sweeps) >= 1
+    # idempotent: a fixpoint re-prunes to itself in one sweep
+    again, sweeps2 = get_backend(backend).prune_fixpoint(got, p.Q, p.G)
+    np.testing.assert_array_equal(np.asarray(again), np.asarray(got))
+    assert int(sweeps2) == 1
+
+
+def test_fused_prune_sweep_counts_agree_across_backends():
+    p = _Problem(11, 1, 10, 16, jnp.uint8)
+    _, s_ref = get_backend("ref").prune_fixpoint(p.mask, p.Q, p.G)
+    _, s_int = get_backend("interpret").prune_fixpoint(p.mask, p.Q, p.G)
+    assert int(s_ref) == int(s_int)
+
+
+def test_fused_prune_respects_iteration_budget():
+    p = _Problem(13, 1, 12, 20, jnp.uint8)
+    for bk_name in ("ref", "interpret"):
+        bk = get_backend(bk_name)
+        one, sweeps = bk.prune_fixpoint(p.mask, p.Q, p.G, max_iters=1)
+        want = ref.injectivity_prune(
+            ref.ullmann_refine_step(p.mask, p.Q, p.G))
+        np.testing.assert_array_equal(np.asarray(one), np.asarray(want))
+        assert int(sweeps) <= 1
+
+
+# ---------------------- registry + selection precedence --------------------
+
+def test_selection_precedence(monkeypatch):
+    monkeypatch.delenv(ENV_VAR, raising=False)
+    # 4. platform default (CPU → ref)
+    assert resolve_backend_name() == "ref"
+    assert resolve_backend_name(config=pso.PSOConfig()) == "ref"
+    # 3. env override beats the default (and "auto" configs)
+    monkeypatch.setenv(ENV_VAR, "interpret")
+    assert resolve_backend_name() == "interpret"
+    assert resolve_backend_name(config=pso.PSOConfig(backend="auto")) \
+        == "interpret"
+    # 2. an explicit config beats the env
+    assert resolve_backend_name(config=pso.PSOConfig(backend="ref")) == "ref"
+    # 1. an explicit argument beats everything
+    assert resolve_backend_name(
+        "pallas", config=pso.PSOConfig(backend="ref")) == "pallas"
+    assert get_backend("interpret").name == "interpret"
+
+
+def test_unknown_backend_raises_with_registered_list():
+    with pytest.raises(KeyError, match="registered"):
+        get_backend("no-such-backend")
+
+
+def test_register_custom_backend_roundtrip():
+    class Custom(KernelBackend):
+        pass
+
+    try:
+        register_backend(Custom("custom-test", ops_backend="ref"))
+        assert "custom-test" in registered_backends()
+        bk = get_backend("custom-test")
+        assert isinstance(bk, Custom)
+        p = _Problem(3, 1, 8, 16, jnp.uint8)
+        _assert_leaves_match(bk.edge_fitness(p.S, p.Q, p.G),
+                             get_backend("ref").edge_fitness(p.S, p.Q, p.G))
+    finally:
+        from repro.kernels.backend import _REGISTRY
+        _REGISTRY.pop("custom-test", None)
+
+
+def test_register_custom_backend_defaults_and_casing():
+    """The documented recipe must work as written: a suite registered
+    with no ops_backend runs its inherited kernels on the platform
+    default path, and mixed-case names resolve through every selection
+    route (names are normalized)."""
+    try:
+        register_backend(KernelBackend("MySuite"))
+        bk = get_backend("MySuite")          # arg path, caller's casing
+        assert bk.name == "mysuite"
+        assert get_backend(config=pso.PSOConfig(backend="MySuite")) is bk
+        p = _Problem(5, 1, 8, 16, jnp.uint8)
+        # inherited kernel: platform default ("auto" → ref on CPU)
+        _assert_leaves_match(bk.edge_fitness(p.S, p.Q, p.G),
+                             get_backend("ref").edge_fitness(p.S, p.Q, p.G))
+    finally:
+        from repro.kernels.backend import _REGISTRY
+        _REGISTRY.pop("mysuite", None)
+    # an explicit dispatch tag the ops layer cannot honour fails loudly
+    with pytest.raises(ValueError, match="dispatch tag"):
+        KernelBackend("broken", ops_backend="no-such-tag")
+
+
+# ---------------------- the seam end-to-end --------------------------------
+
+@pytest.mark.slow
+def test_match_runs_on_interpret_backend():
+    """The whole Algorithm-1 program compiles and solves a planted
+    instance with every kernel routed through the Pallas-interpret
+    suite — the seam reaches every call site, not just the leaf tests."""
+    from repro.core import graphs
+    key = jax.random.PRNGKey(0)
+    kq, kt = jax.random.split(key)
+    q = graphs.random_dag(kq, 4, 0.4)
+    g = graphs.embed_query_in_target(kt, q, 8)
+    Q, G, mask = graphs.as_device_graphs(q, g)
+    cfg = pso.PSOConfig(num_particles=4, epochs=1, inner_steps=2,
+                        refine_iters=2, backend="interpret")
+    outs = pso.match(key, Q, G, mask, cfg)
+    ref_cfg = cfg.replace(backend="ref")
+    outs_ref = pso.match(key, Q, G, mask, ref_cfg)
+    # same pruned search space, same sweep count, and both find the
+    # planted embedding
+    assert int(outs["prune_sweeps"]) == int(outs_ref["prune_sweeps"])
+    assert bool(np.asarray(outs["feasible"]).any())
+    assert bool(np.asarray(outs_ref["feasible"]).any())

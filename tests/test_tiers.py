@@ -438,3 +438,196 @@ def test_isosched_memo_warms_repeat_traffic():
     r = Simulator(cfg, get_scheduler("isosched")).run(sc)
     assert r.matcher_stats["memo_hits"] > 0
     assert r.matcher_stats["memo_misses"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# Popcount-bucketed similarity index (PR 4)
+# ---------------------------------------------------------------------------
+
+def test_carry_store_index_matches_linear_scan():
+    """Property sweep: the popcount-bucketed probe must return exactly
+    what the exhaustive linear scan returns — same neighbour, same carry
+    — including overwrite/recency ties, exclusions and shape-mismatched
+    signatures."""
+    rng = np.random.default_rng(0)
+    store = CarryStore(capacity=4, sim_capacity=4096, stats=ServiceStats())
+    E = 32
+    sigs = []
+    for i in range(300):
+        bits = rng.random(E) < rng.uniform(0.05, 0.95)
+        sig = _sig(bits)
+        store.put_similar("q", (8, 16), sig, carry=("c", i))
+        sigs.append(sig)
+    # overwrite some entries (recency tie-break churn)
+    for i in rng.choice(len(sigs), 50, replace=False):
+        store.put_similar("q", (8, 16), sigs[i], carry=("c2", int(i)))
+    # a second workload group and a shorter-signature group: neither may
+    # leak into "q"/(8, 16)/32-bit queries
+    for i in range(40):
+        store.put_similar("other", (8, 16),
+                          _sig(rng.random(E) < 0.5), carry=("o", i))
+        store.put_similar("q", (8, 16),
+                          _sig(rng.random(16) < 0.5), carry=("short", i))
+    for trial in range(60):
+        q_bits = rng.random(E) < rng.uniform(0.0, 1.0)
+        q_sig = _sig(q_bits)
+        excl = sigs[int(rng.integers(len(sigs)))] if trial % 3 == 0 else None
+        got = store.nearest("q", (8, 16), q_sig, exclude_sig=excl)
+        want = store._nearest_linear("q", (8, 16), q_sig, exclude_sig=excl)
+        assert got == want
+    # exact-signature queries must return their own entry under both paths
+    # (an all-zero signature legitimately has no neighbour)
+    for i in (0, 17, 123):
+        got = store.nearest("q", (8, 16), sigs[i])
+        want = store._nearest_linear("q", (8, 16), sigs[i])
+        assert got == want
+        if np.unpackbits(np.frombuffer(sigs[i], np.uint8)).sum() > 0:
+            assert got is not None
+
+
+def test_carry_store_index_consistent_after_eviction():
+    rng = np.random.default_rng(1)
+    store = CarryStore(capacity=4, sim_capacity=32, stats=ServiceStats())
+    for i in range(200):
+        bits = rng.random(24) < 0.5
+        store.put_similar(f"q{i % 3}", (8, 16), _sig(bits), carry=i)
+    assert store.sim_entries == 32
+    indexed = {(qd, bk, sig)
+               for (qd, bk, _nb), group in store._sim_buckets.items()
+               for bin_ in group.values() for sig in bin_}
+    assert indexed == set(store._sim)
+    assert set(store._sim_seq) == set(store._sim)
+    # probes still agree with the oracle after heavy eviction churn
+    for _ in range(20):
+        q_sig = _sig(rng.random(24) < 0.5)
+        assert store.nearest("q0", (8, 16), q_sig) == \
+            store._nearest_linear("q0", (8, 16), q_sig)
+
+
+def test_carry_store_linear_fallback_flag():
+    store = CarryStore(capacity=4, sim_capacity=8, stats=ServiceStats(),
+                       sim_index=False)
+    free = np.zeros(16, bool)
+    free[:8] = True
+    store.put_similar("q", (8, 16), _sig(free), carry="a")
+    assert store.nearest("q", (8, 16), _sig(free)) == (_sig(free), "a")
+
+
+# ---------------------------------------------------------------------------
+# Calibrated tier predictor + prune-latency accounting (PR 4)
+# ---------------------------------------------------------------------------
+
+def _predictor(overlap_bits=12, total=16):
+    """An IMMSchedScheduler with one remembered platform state and a query
+    signature overlapping it by ``overlap_bits``/``total``."""
+    from repro.sched.schedulers import IMMSchedScheduler
+    sched = IMMSchedScheduler()
+    sched._state_index = {}
+    sched._tier1_obs = {}
+    stored = np.zeros(total, bool)
+    stored[:overlap_bits] = True
+    sched._note_state("w", free_engine_signature(stored))
+    query = np.zeros(total, bool)
+    query[:overlap_bits] = True
+    query[overlap_bits:] = False
+    query[-2:] = True                      # drifted free set, high overlap
+    return sched, free_engine_signature(query)
+
+
+def test_tier1_predictor_flips_on_observed_failures():
+    sched, sig = _predictor()
+    assert sched._predict_tier("w", sig) == 1      # prior 2/3 ≥ 0.5
+    sched._note_tier1_outcome("w", sig, False)
+    sched._note_tier1_outcome("w", sig, False)     # posterior 2/5 < 0.5
+    assert sched._predict_tier("w", sig) == 2
+    for _ in range(4):
+        sched._note_tier1_outcome("w", sig, True)  # 6/9 ≥ 0.5 again
+    assert sched._predict_tier("w", sig) == 1
+    # unrelated workloads keep the prior
+    sched._note_state("other", sig)
+    assert sched._predict_tier("other", sig) == 0  # exact state stored
+
+
+def test_tier1_calibration_is_bucketed_by_signature_popcount():
+    sched, sig = _predictor()
+    # drive this bucket's posterior below 0.5 ...
+    sched._note_tier1_outcome("w", sig, False)
+    sched._note_tier1_outcome("w", sig, False)
+    assert sched._tier1_success_prob("w", sig) < 0.5
+    # ... a very different free-set size lands in another bucket and
+    # still sees the prior
+    small = np.zeros(16, bool)
+    small[:2] = True
+    assert sched._tier1_success_prob("w", free_engine_signature(small)) \
+        >= 0.5
+
+
+def test_immsched_charges_prune_for_cold_swarm_decisions():
+    wls = [get_workload("mobilenetv2"), get_workload("resnet50")]
+    sc = fixed_scenario(wls, urgent_last=False)
+    cfg = SimConfig(platform=EDGE, matcher_mode="analytic")
+    r = Simulator(cfg, get_scheduler("immsched")).run(sc)
+    ms = r.matcher_stats
+    # cold arrivals predict Tier 2 → every swarm charge pays the fused
+    # pre-prune on top, surfaced via the sched_prune_* counters
+    assert ms["sched_tier2_decisions"] > 0
+    assert ms["sched_prune_launches"] > 0
+    assert ms["sched_prune_wall_s"] > 0
+    assert ms["sched_tier1_calib_trials"] == 0     # analytic mode: no obs
+    from repro.sched.metrics import pipeline_tier_rates
+    rates = pipeline_tier_rates(r)
+    assert rates["sched_prune_launches"] == ms["sched_prune_launches"]
+
+
+def test_prune_cost_scales_with_sweeps():
+    from repro.accel import CostModel
+    cost = CostModel(EDGE)
+    st1, se1 = cost.sched_immsched_prune(48, EDGE.engines, 16, sweeps=1)
+    st8, se8 = cost.sched_immsched_prune(48, EDGE.engines, 16, sweeps=8)
+    assert st8 > st1 and se8 > se1
+    # the pre-prune is far below a swarm launch (it must never dominate
+    # the Tier-2 charge it rides on)
+    cfg = PSOConfig(num_particles=32, epochs=2, inner_steps=8)
+    st_s, _ = cost.sched_immsched(48, EDGE.engines, cfg, 16)
+    assert st8 < st_s
+
+
+def test_service_surfaces_prune_sweeps():
+    svc = MatcherService(CFG)
+    q, g = _planted(0, 6, 12)
+    res = svc.match(q, g, workload_key="prune/w")
+    assert res.prune_sweeps >= 1
+    sd = svc.stats_dict()
+    assert sd["prune_problems"] == 1
+    assert sd["prune_sweeps"] == res.prune_sweeps
+    assert sd["avg_prune_sweeps"] == pytest.approx(res.prune_sweeps)
+    # prune accounting also covers drained (batched) traffic
+    svc.submit(q, g, workload_key="prune/w2")
+    q2, g2 = _planted(1, 6, 12)
+    svc.submit(q2, g2, workload_key="prune/w3")
+    svc.drain()
+    assert svc.stats_dict()["prune_problems"] >= 3
+
+
+def test_tier1_calibration_recovers_from_absorbed_bucket():
+    """A bucket whose posterior dropped below 0.5 is predicted Tier-2, so
+    no Tier-1 predictions (and naively no observations) would ever flow
+    again; verified-rebase serves of predicted-Tier-2 decisions must
+    re-open it."""
+    from types import SimpleNamespace
+    sched, sig = _predictor()
+    sched._note_tier1_outcome("w", sig, False)
+    sched._note_tier1_outcome("w", sig, False)
+    assert sched._predict_tier("w", sig) == 2      # absorbed (2/5 < 0.5)
+    served_by_rebase = SimpleNamespace(found=True, tier=1)
+    for _ in range(4):
+        sched._calibrate_tier1([("w", sig, 2)], [served_by_rebase])
+    assert sched._predict_tier("w", sig) == 1      # 6/9 ≥ 0.5: recovered
+    # neutral evidence never moves the posterior: Tier-0 serves, cold
+    # swarm serves, and skipped launches
+    before = dict(sched._tier1_obs)
+    sched._calibrate_tier1(
+        [("w", sig, 2), ("w", sig, 2), ("w", sig, 0)],
+        [SimpleNamespace(found=True, tier=0),
+         SimpleNamespace(found=True, tier=2), None])
+    assert dict(sched._tier1_obs) == before
