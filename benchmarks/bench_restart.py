@@ -1,0 +1,226 @@
+"""Warm-restart benchmark: cold-restart vs snapshot/AOT-restored service.
+
+The persistence layer exists for ONE number: what does the first burst
+after a scheduler-process restart cost? Two experiments:
+
+  1. **Service restart** — a burst of revalidatable problems is served
+     by (a) a *cold-restarted* service (fresh process state, no
+     persistence: the burst pays jit traces, XLA compiles and a cold
+     CarryStore → full swarm) and (b) a *warm-restarted* service (same
+     persist dir as a previous incarnation: executables deserialize from
+     the on-disk AOT cache, carries restore from the snapshot → the
+     whole burst re-validates at Tier 0 with ``jit_traces == 0``).
+     Acceptance: warm-restart first-burst latency ≪ cold-restart, zero
+     traces, all problems served at Tier 0/1, results bitwise equal to
+     the pre-restart warm serve.
+  2. **Simulator restart** — ``make_restart_scenario`` (identical
+     traffic replayed after a mid-trace kill) through the event
+     simulator with the real matcher, cold arm (no ``persist_dir``) vs
+     warm arm (snapshot-before-kill + restore): post-restart scheduling
+     behaviour (tier decision mix, restored state) is surfaced via
+     ``warm_restart_stats`` / ``pipeline_tier_rates``.
+
+Emits ``BENCH_restart.json`` and CSV rows on stdout.
+
+Usage: PYTHONPATH=src python -m benchmarks.bench_restart
+           [--burst K] [--repeats N] [--smoke] [--out FILE]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import statistics
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.accel import EDGE
+from repro.core import graphs, pso
+from repro.core.service import MatcherService
+from repro.sched import SimConfig, Simulator, get_scheduler
+from repro.sched.metrics import pipeline_tier_rates, warm_restart_stats
+from repro.sched.tasks import make_restart_scenario
+
+
+def _planted(seed: int, n: int, m: int):
+    key = jax.random.PRNGKey(seed)
+    kq, kt = jax.random.split(key)
+    q = graphs.random_dag(kq, n, 0.35)
+    g = graphs.embed_query_in_target(kt, q, m)
+    return q, g
+
+
+def _servable_problems(cfg: pso.PSOConfig, want: int, seed0: int = 100):
+    """Planted problems whose stored carry re-validates on repeat (the
+    warm traffic class a restarted service should serve at Tier 0).
+    ``persist_dir=False`` everywhere below: the probe and cold arms must
+    not pick up an operator's ``REPRO_PERSIST_DIR``."""
+    svc = MatcherService(cfg, persist_dir=False)
+    probs, keys, wks = [], [], []
+    s = seed0
+    while len(probs) < want and s < seed0 + 60 * want:
+        q, g = _planted(s, 6, 12)
+        key = jax.random.PRNGKey(s)
+        wk = f"wl/{s}"
+        r = svc.match(q, g, key=key, workload_key=wk)
+        if r.found:
+            r2 = svc.match(q, g, key=jax.random.PRNGKey(s + 999),
+                           workload_key=wk)
+            if r2.tier == 0:
+                probs.append((q, g))
+                keys.append(key)
+                wks.append(wk)
+        s += 1
+    assert len(probs) == want, "not enough revalidatable planted problems"
+    return probs, keys, wks
+
+
+def bench_service_restart(cfg: pso.PSOConfig, burst: int, repeats: int):
+    probs, keys, wks = _servable_problems(cfg, burst)
+
+    # --- cold-restart arm FIRST: it must run before any persistent
+    # service exists in this process, because enabling the persistent
+    # XLA compilation cache is process-global — a cold arm measured
+    # after the seed incarnation would have its XLA compiles served
+    # from the seed's disk cache and understate the true cold cost.
+    cold_lat, cold_traces = [], []
+    for _ in range(repeats):
+        svc = MatcherService(cfg, persist_dir=False,
+                             batch_classes=(1, 2, 4, max(8, burst)))
+        t0 = time.perf_counter()
+        rs = svc.match_many(probs, keys=keys, workload_keys=wks)
+        cold_lat.append(time.perf_counter() - t0)
+        cold_traces.append(svc.stats.jit_traces)
+        assert [r.found for r in rs] == [True] * burst
+
+    # --- seed incarnation: serve the trace, export executables, snapshot
+    seed_dir = tempfile.mkdtemp(prefix="bench_restart_seed_")
+    svc_seed = MatcherService(cfg, persist_dir=seed_dir,
+                              batch_classes=(1, 2, 4, max(8, burst)))
+    svc_seed.match_many(probs, keys=keys, workload_keys=wks)   # cold
+    warm_ref = svc_seed.match_many(probs, keys=keys, workload_keys=wks)
+    svc_seed.save_snapshot()
+    seed_stats = svc_seed.stats_dict()
+
+    # --- warm-restart arm: restore snapshot + AOT executables
+    warm_lat, warm_traces, warm_tiers = [], [], None
+    bitwise_equal = True
+    for _ in range(repeats):
+        svc = MatcherService(cfg, persist_dir=seed_dir,
+                             batch_classes=(1, 2, 4, max(8, burst)))
+        restored = svc.restore_snapshot()
+        assert restored is not None, "snapshot must restore"
+        t0 = time.perf_counter()
+        rs = svc.match_many(probs, keys=keys, workload_keys=wks)
+        warm_lat.append(time.perf_counter() - t0)
+        warm_traces.append(svc.stats.jit_traces)
+        warm_tiers = [r.tier for r in rs]
+        for a, b in zip(warm_ref, rs):
+            if a.found != b.found or not np.array_equal(
+                    np.asarray(a.mapping), np.asarray(b.mapping)):
+                bitwise_equal = False
+    shutil.rmtree(seed_dir, ignore_errors=True)
+
+    cold_med = statistics.median(cold_lat)
+    warm_med = statistics.median(warm_lat)
+    return {
+        "burst": burst,
+        "cold_restart_first_burst_median_s": cold_med,
+        "warm_restart_first_burst_median_s": warm_med,
+        "warm_over_cold_ratio": warm_med / max(cold_med, 1e-12),
+        "cold_restart_traces": max(cold_traces),
+        "warm_restart_traces": max(warm_traces),
+        "warm_tiers": warm_tiers,
+        "tier0_served": sum(1 for t in warm_tiers if t == 0),
+        "bitwise_equal_to_pre_restart": bitwise_equal,
+        "seed_aot_exports": seed_stats["aot_exports"],
+        "seed_snapshot_saves": seed_stats["snapshot_saves"],
+        "pass": (max(warm_traces) == 0
+                 and warm_med < cold_med
+                 and bitwise_equal
+                 and all(t <= 1 for t in warm_tiers)),
+    }
+
+
+def bench_simulator_restart(cfg: pso.PSOConfig, smoke: bool):
+    sc = make_restart_scenario(
+        "simple", rate_hz=25, phase_horizon=0.15 if smoke else 0.4,
+        burst_size=4, burst_frac=0.6, seed=11)
+    out = {"scenario": sc.name, "tasks": len(sc.tasks),
+           "restart_at": sc.restarts}
+    for label, persist_dir in (
+            ("cold", None),
+            ("warm", tempfile.mkdtemp(prefix="bench_restart_sim_"))):
+        sim_cfg = SimConfig(platform=EDGE, matcher_mode="real",
+                            pso_cfg=cfg, window_stages=2,
+                            persist_dir=persist_dir)
+        r = Simulator(sim_cfg, get_scheduler("immsched")).run(sc)
+        out[label] = {
+            "finished": r.finished, "total": r.total,
+            "deadline_met": r.deadline_met,
+            "avg_total_latency_s": r.avg_total_latency,
+            "avg_sched_time_s": r.avg_sched_time,
+            "restart": warm_restart_stats(r),
+            "tier_rates": pipeline_tier_rates(r),
+        }
+        if persist_dir:
+            shutil.rmtree(persist_dir, ignore_errors=True)
+    w, c = out["warm"], out["cold"]
+    out["warm_restored_state"] = (
+        w["restart"]["snapshot_restores"] >= 1
+        and w["restart"]["restart_restored_state_sigs"] > 0)
+    out["pass"] = bool(out["warm_restored_state"]
+                       and c["restart"]["snapshot_restores"] == 0)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--burst", type=int, default=6)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI config: small swarm, short runs")
+    ap.add_argument("--out", default="BENCH_restart.json")
+    args = ap.parse_args()
+
+    if args.smoke:
+        cfg = pso.PSOConfig(num_particles=8, epochs=2, inner_steps=4)
+        burst, repeats = 3, 1
+    else:
+        cfg = pso.PSOConfig(num_particles=32, epochs=2, inner_steps=8)
+        burst, repeats = args.burst, max(args.repeats, 2)
+
+    service = bench_service_restart(cfg, burst, repeats)
+    sim = bench_simulator_restart(cfg, args.smoke)
+
+    result = {
+        "smoke": bool(args.smoke),
+        "pso_cfg": {"num_particles": cfg.num_particles,
+                    "epochs": cfg.epochs, "inner_steps": cfg.inner_steps},
+        "service": service,
+        "simulator": sim,
+    }
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+
+    print("name,us_per_call,derived")
+    print(f"restart_cold_first_burst,"
+          f"{service['cold_restart_first_burst_median_s'] * 1e6:.1f},"
+          f"traces={service['cold_restart_traces']}")
+    print(f"restart_warm_first_burst,"
+          f"{service['warm_restart_first_burst_median_s'] * 1e6:.1f},"
+          f"traces={service['warm_restart_traces']}"
+          f"_tier0={service['tier0_served']}/{service['burst']}")
+    print(f"restart_warm_over_cold,0.0,"
+          f"ratio={service['warm_over_cold_ratio']:.4f}")
+    print(f"restart_sim_warm_restored,0.0,"
+          f"{'yes' if sim['warm_restored_state'] else 'no'}")
+    ok = service["pass"] and sim["pass"]
+    print(f"restart_acceptance,0.0,{'PASS' if ok else 'FAIL'}")
+
+
+if __name__ == "__main__":
+    main()

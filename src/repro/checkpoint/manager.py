@@ -41,6 +41,16 @@ def _leaf_file(path_names) -> str:
 
 
 class CheckpointManager:
+    """Atomic, optionally-async checkpoint store rooted at ``directory``.
+
+    Used for two state families: training state (arbitrary pytrees, via
+    ``save``/``restore`` with a matching ``state_like``) and the matcher
+    service's warm-restart snapshots (flat ``{name: array}`` dicts, via
+    ``save``/``restore_flat`` — no template needed because the committed
+    ``META.json`` fully describes a flat dict). ``keep`` bounds the
+    number of committed steps retained on disk (oldest GC'd first).
+    """
+
     def __init__(self, directory: str, async_save: bool = True,
                  keep: int = 3):
         self.dir = directory
@@ -52,6 +62,14 @@ class CheckpointManager:
     # ------------------------------------------------------------------
     def save(self, step: int, state: Any,
              extras: Optional[Dict] = None) -> None:
+        """Commit ``state`` (any pytree of arrays) as step ``step``.
+
+        Arrays are snapshotted to host memory synchronously; file I/O
+        runs on a writer thread when ``async_save`` (call ``wait()`` to
+        join it). ``extras`` must be JSON-serializable — snapshot
+        metadata (format version, config digest, store keys) rides here.
+        The commit is atomic: a crash mid-write leaves only a ``*.tmp``
+        directory, which every restore path ignores."""
         self.wait()                      # one in-flight save at a time
         flat, treedef = tree_flatten_with_path(state)
         # snapshot to host memory synchronously (cheap vs file I/O)
@@ -86,6 +104,7 @@ class CheckpointManager:
             write()
 
     def wait(self) -> None:
+        """Join the in-flight async save, if any (idempotent)."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
@@ -98,6 +117,9 @@ class CheckpointManager:
 
     # ------------------------------------------------------------------
     def all_steps(self):
+        """Sorted step numbers of every *committed* checkpoint (``*.tmp``
+        partial writes are invisible here, which is what makes the
+        rename-commit crash-safe)."""
         out = []
         for name in os.listdir(self.dir):
             m = re.fullmatch(r"step_(\d+)", name)
@@ -106,8 +128,38 @@ class CheckpointManager:
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:
+        """Newest committed step, or None when the store is empty."""
         steps = self.all_steps()
         return steps[-1] if steps else None
+
+    def restore_flat(self, step: Optional[int] = None):
+        """Restore a checkpoint saved from a FLAT ``{name: array}`` dict.
+
+        Unlike :meth:`restore` this needs no ``state_like`` template —
+        the committed ``META.json`` lists every leaf's path and file, and
+        a flat dict's tree structure is exactly that list. Returns
+        ``(arrays, extras)`` with ``arrays`` a ``{name: np.ndarray}``
+        dict, or ``(None, None)`` when no committed step exists (so
+        callers can treat an empty store as a clean cold start rather
+        than an error). Raises on non-flat checkpoints (nested paths)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            return None, None
+        d = os.path.join(self.dir, f"step_{step:09d}")
+        with open(os.path.join(d, "META.json")) as f:
+            meta = json.load(f)
+        arrays: Dict[str, np.ndarray] = {}
+        for leaf in meta["leaves"]:
+            path = leaf["path"]
+            if len(path) != 1:
+                raise ValueError(
+                    f"restore_flat on a nested checkpoint (leaf {path}); "
+                    f"use restore(state_like) for pytree state")
+            arrays[path[0]] = np.load(os.path.join(d, leaf["file"]))
+        with open(os.path.join(d, "extras.json")) as f:
+            extras = json.load(f)
+        return arrays, extras
 
     def restore(self, state_like: Any, step: Optional[int] = None,
                 shardings: Any = None):

@@ -168,6 +168,13 @@ def build_distributed_match(Q_shape: Tuple[int, int], mesh: Mesh,
     ``pso.default_carry(mask)`` for a cold start). The result pytree
     mirrors ``pso.match`` with a leading shard axis on the per-particle
     outputs.
+
+    The returned executable is tagged ``aot_exportable = False``: a
+    ``jax.export``-serialized shard_map program pins the exporting
+    process's device topology, so the service's on-disk AOT cache must
+    not persist it (a restart on a different mesh would fail or skew the
+    collective schedule). Mesh executables lean on JAX's persistent XLA
+    compilation cache instead (see ``core/persist.py``).
     """
     axis_names = tuple(axis_names)
 
@@ -228,7 +235,15 @@ def build_distributed_match(Q_shape: Tuple[int, int], mesh: Mesh,
     shard_map = get_shard_map()
     fn = shard_map(local_match, mesh=mesh, in_specs=in_specs,
                    out_specs=out_specs)
-    return jax.jit(fn)
+    return _mark_mesh_executable(jax.jit(fn))
+
+
+def _mark_mesh_executable(fn):
+    """Tag a mesh-bound executable so the AOT persistence layer skips
+    ``jax.export`` for it (the serialized program would pin this
+    process's device count/topology); see ``build_distributed_match``."""
+    fn.aot_exportable = False
+    return fn
 
 
 def build_distributed_match_batch(Q_shape: Tuple[int, int], mesh: Mesh,
@@ -271,7 +286,7 @@ def build_distributed_match_batch(Q_shape: Tuple[int, int], mesh: Mesh,
         shard_map = get_shard_map()
         fn = shard_map(local_match, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs)
-        return jax.jit(fn)
+        return _mark_mesh_executable(jax.jit(fn))
 
     per_problem = build_distributed_match(Q_shape, mesh, cfg, axis_names)
     per_epoch = ("mappings", "feasible", "fitness", "f_star_trace")
@@ -286,7 +301,7 @@ def build_distributed_match_batch(Q_shape: Tuple[int, int], mesh: Mesh,
                              axis=1 if k in per_epoch else 0)
                 for k in outs_list[0]}
 
-    return jax.jit(fn)
+    return _mark_mesh_executable(jax.jit(fn))
 
 
 def build_distributed_revalidate_batch(Q_shape: Tuple[int, int], mesh: Mesh,
@@ -327,7 +342,7 @@ def build_distributed_revalidate_batch(Q_shape: Tuple[int, int], mesh: Mesh,
                          S_star=P(), S_bar=P(), prune_sweeps=P())
     fn = shard_map(local_reval, mesh=mesh, in_specs=in_specs,
                    out_specs=out_specs)
-    return jax.jit(fn)
+    return _mark_mesh_executable(jax.jit(fn))
 
 
 class IMMSchedMatcher:

@@ -37,6 +37,19 @@ from repro.kernels import backend as kernel_backend
 
 @dataclasses.dataclass(frozen=True)
 class PSOConfig:
+    """Static configuration of Algorithm 1 (one frozen value per knob).
+
+    Every field is trace-static: two configs that differ in ANY field
+    compile (and AOT-cache, and snapshot-validate) as different
+    programs — ``kernels.backend.config_digest`` hashes all of them, so
+    the service's persisted executables and warm-state snapshots are
+    automatically invalidated by a config drift. Fields are documented
+    inline below; swarm-shape fields (``num_particles``/``epochs``/
+    ``inner_steps``) set array shapes, the float knobs are baked-in
+    constants, and the ``backend``/``quantized``/``prune_mask``/
+    ``early_exit`` family selects which kernels the traced program
+    calls.
+    """
     num_particles: int = 64          # N (per device in the sharded matcher)
     epochs: int = 4                  # T
     inner_steps: int = 12            # K
@@ -44,12 +57,12 @@ class PSOConfig:
     c1: float = 1.4                  # cognitive (S_local)
     c2: float = 1.4                  # social (S*)
     c3: float = 0.6                  # consensus (S̄) — the paper's addition
-    v_max: float = 0.5
+    v_max: float = 0.5               # velocity clamp per S entry
     elite_frac: float = 0.25         # top-k fraction fused into S̄
     consensus_temp: float = 25.0     # softmax temperature on normalized f
     refine_threshold: float = 0.5    # S ≥ τ·rowmax(S) enters the candidate set
     refine_iters: int = 6            # Ullmann pruning sweeps
-    quantized: bool = False
+    quantized: bool = False          # uint8 S + int32-MAC fitness (§3.4)
     backend: str = "auto"            # KernelBackend registry name
                                      # ("ref" | "pallas" | "interpret");
                                      # "auto" defers to the

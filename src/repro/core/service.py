@@ -59,16 +59,18 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import os
 import time
 from collections import OrderedDict
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.accel.target_graph import signature_bits
-from repro.core import pso
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import persist, pso
 from repro.core.graphs import (Graph, compatibility_mask,
                                topological_relabel)
 from repro.core.matcher import (MatchResult, build_distributed_match,
@@ -76,6 +78,7 @@ from repro.core.matcher import (MatchResult, build_distributed_match,
                                 build_distributed_revalidate_batch,
                                 collect_batch_results, collect_result)
 from repro.core.preemptible_dag import pad_problem
+from repro.kernels import backend as kernel_backend
 
 
 def _round_up(v: int, mult: int) -> int:
@@ -110,6 +113,15 @@ class TierStats:
 
 @dataclasses.dataclass
 class ServiceStats:
+    """Cumulative counters for one ``MatcherService`` incarnation.
+
+    Counters cover the compile LRU, warm-start stores, per-tier pipeline
+    activity, the fused pre-prune observable the scheduler calibrates
+    against, and the warm-restart persistence layer (``jit_traces`` /
+    ``aot_*`` / ``snapshot_*`` / ``restored_*``). Exported flat — plus
+    derived rates — by ``MatcherService.stats_dict()``; counters reset
+    with the process (a restart starts a fresh incarnation, which is
+    exactly what the restart benchmarks measure)."""
     calls: int = 0
     compile_cache_hits: int = 0      # bucket already had an executable
     compile_cache_misses: int = 0    # new bucket → jit compile
@@ -133,20 +145,40 @@ class ServiceStats:
     sim_lookups: int = 0             # similarity-store nearest() queries
     sim_neighbor_hits: int = 0       # queries that found a neighbour carry
     sim_evictions: int = 0
+    # -- warm-restart persistence (AOT executable cache + snapshots) ----
+    jit_traces: int = 0              # Python-level jit traces this process
+                                     # actually ran (the cold-start cost a
+                                     # warm restart must NOT pay: a
+                                     # restored burst asserts == 0)
+    aot_cache_hits: int = 0          # executables deserialized from disk
+    aot_cache_misses: int = 0        # persistence on, but no blob on disk
+    aot_exports: int = 0             # executables serialized to disk
+    aot_export_failures: int = 0     # export unsupported → plain jit
+    aot_call_fallbacks: int = 0      # deserialized blob rejected the call
+                                     # signature → live re-trace
+    snapshot_saves: int = 0
+    snapshot_restores: int = 0       # successful state restores
+    snapshot_stale_skipped: int = 0  # version/digest drift → ignored
+    snapshot_skipped_keys: int = 0   # entries with unencodable keys
+    restored_carries: int = 0        # exact carries loaded by restore
+    restored_sim_entries: int = 0    # similarity entries loaded by restore
     tier0: TierStats = dataclasses.field(default_factory=TierStats)
     tier1: TierStats = dataclasses.field(default_factory=TierStats)
     tier2: TierStats = dataclasses.field(default_factory=TierStats)
 
     @property
     def epochs_saved(self) -> int:
+        """Budgeted minus executed epochs (early exit + fast paths)."""
         return self.epochs_budgeted - self.epochs_run
 
     @property
     def compile_hit_rate(self) -> float:
+        """Fraction of calls served by an already-built executable."""
         return self.compile_cache_hits / max(self.calls, 1)
 
     @property
     def warm_hit_rate(self) -> float:
+        """Fraction of calls that found an exact stored carry."""
         return self.warm_hits / max(self.calls, 1)
 
     @property
@@ -261,9 +293,11 @@ class CarryStore:
 
     @property
     def sim_entries(self) -> int:
+        """Number of entries currently in the similarity store."""
         return len(self._sim)
 
     def clear(self) -> None:
+        """Drop both stores and the derived popcount index/recency."""
         self._exact.clear()
         self._sim.clear()
         self._sim_seq.clear()
@@ -272,6 +306,8 @@ class CarryStore:
     # -- exact tier --------------------------------------------------------
 
     def get(self, key) -> Tuple[Optional[tuple], bool]:
+        """Exact-store lookup → ``(carry, hit)``; refreshes LRU recency
+        and counts ``warm_hits``/``warm_misses``."""
         if key in self._exact:
             self._exact.move_to_end(key)
             self.stats.warm_hits += 1
@@ -280,6 +316,9 @@ class CarryStore:
         return None, False
 
     def put(self, key, carry) -> None:
+        """Store ``carry`` (a ``(S*, f*, S̄)`` tuple of (n, m)/(n, m)/
+        scalar arrays) under the exact content key, evicting LRU
+        entries beyond ``capacity``."""
         self._exact[key] = carry
         while len(self._exact) > self.capacity:
             self._exact.popitem(last=False)
@@ -293,6 +332,10 @@ class CarryStore:
 
     def put_similar(self, qdigest: str, bucket: Tuple[int, int],
                     sig: bytes, carry) -> None:
+        """Store ``carry`` under the similarity key (query digest, shape
+        bucket, free-engine signature) and index it by signature
+        popcount; refreshes recency for most-recent-wins ``nearest``
+        tiebreaks."""
         key = (qdigest, bucket, sig)
         bits = self._bits(sig)
         fresh = key not in self._sim
@@ -374,6 +417,37 @@ class CarryStore:
                     best = (s, carry)
         return best
 
+    # -- snapshot support --------------------------------------------------
+
+    def export_state(self) -> Tuple[List[Tuple[Tuple, tuple]],
+                                    List[Tuple[Tuple, tuple]]]:
+        """Both stores as ``(exact_items, sim_items)`` key/carry lists.
+
+        Items come out in LRU order (least recent first) so an
+        ``import_state`` replay reproduces recency — evictions and
+        ``nearest`` most-recent-wins tiebreaks behave identically after
+        a snapshot/restore round trip. Carries are returned as stored
+        (device or host arrays); the snapshot writer converts to numpy.
+        """
+        exact = [(k, c) for k, c in self._exact.items()]
+        sim = [(k, c) for k, (_, c) in self._sim.items()]
+        return exact, sim
+
+    def import_state(self, exact_items, sim_items) -> Tuple[int, int]:
+        """Replay exported items into this (fresh) store, oldest first.
+
+        Uses the normal ``put``/``put_similar`` paths so the similarity
+        popcount index and recency sequence are rebuilt from scratch —
+        the snapshot never persists derived index structures, only the
+        keys and carries. Returns ``(n_exact, n_sim)`` loaded. Entries
+        beyond this store's capacities age out exactly as live puts
+        would."""
+        for k, c in exact_items:
+            self.put(k, c)
+        for (qdigest, bucket, sig), c in sim_items:
+            self.put_similar(qdigest, bucket, sig, c)
+        return len(exact_items), len(sim_items)
+
     def _nearest_linear(self, qdigest: str, bucket: Tuple[int, int],
                         sig: bytes, exclude_sig: Optional[bytes] = None
                         ) -> Optional[Tuple[bytes, tuple]]:
@@ -405,6 +479,34 @@ class MatcherService:
     uniform one-swarm-launch-per-batch drain (the PR-2 baseline);
     ``similarity=False`` keeps the pipeline but disables Tier-1 rebases
     (the content-keyed baseline).
+
+    **Warm-restart persistence.** Pass ``persist_dir`` (or set
+    ``REPRO_PERSIST_DIR``; pass ``persist_dir=False`` to force
+    persistence off even when the env var is set — the cold-restart
+    baseline arm) to survive process restarts:
+
+      * ``<persist_dir>/aot/`` — each single-device executable is
+        ``jax.export``-serialized on its first trace and lazily
+        deserialized on the first compile-LRU miss of a restarted
+        process, so the first post-restart burst runs with
+        ``stats.jit_traces == 0``. Keys include the resolved kernel
+        backend, every ``PSOConfig`` field, bucketing parameters, jax
+        version and platform (``config_digest``) — drift is a clean
+        miss, never a wrong program. Mesh-sharded executables are not
+        exported (the blob pins device topology); they rely on the XLA
+        compilation-cache fallback below.
+      * ``<persist_dir>/snapshots/`` — ``save_snapshot`` /
+        ``restore_snapshot`` persist the :class:`CarryStore` (exact +
+        similarity carries; the popcount index is rebuilt on load) and
+        the prune-sweep calibration counters through
+        :class:`~repro.checkpoint.manager.CheckpointManager` (atomic
+        commit, ``keep=snapshot_keep``). Snapshots are versioned and
+        digest-validated: a restore against a drifted config is skipped
+        cleanly (``snapshot_stale_skipped``), never mis-applied.
+      * ``<persist_dir>/xla/`` — JAX's persistent compilation cache is
+        enabled here (process-global; opt out with ``REPRO_JAX_CACHE=0``)
+        so the residual XLA compile of deserialized modules and of the
+        non-exportable mesh executables is also served from disk.
     """
 
     def __init__(self, cfg: Optional[pso.PSOConfig] = None, *,
@@ -414,7 +516,10 @@ class MatcherService:
                  n_multiple: int = 8, m_multiple: int = 16,
                  batch_classes: Sequence[int] = (1, 2, 4, 8),
                  tiered: bool = True, similarity: bool = True,
-                 sim_capacity: int = 128, sim_index: bool = True):
+                 sim_capacity: int = 128, sim_index: bool = True,
+                 persist_dir: Union[str, bool, None] = None,
+                 aot_cache: Optional[bool] = None,
+                 snapshot_keep: int = 3):
         cfg = cfg or pso.PSOConfig()
         if early_exit and not cfg.early_exit:
             cfg = cfg.replace(early_exit=True)
@@ -434,14 +539,48 @@ class MatcherService:
                                    sim_index=sim_index)
         self._compiled: "OrderedDict[Tuple, object]" = OrderedDict()
         self._pending: List[_PendingRequest] = []
+        # -- persistence wiring -------------------------------------------
+        # persist_dir: a path enables persistence there; None defers to
+        # the REPRO_PERSIST_DIR env var; False forces persistence OFF
+        # even when the env var is set (cold-restart baselines must not
+        # silently warm up from an operator's persist root).
+        if persist_dir is None:
+            persist_dir = persist.default_persist_dir()
+        self.persist_dir = persist_dir if persist_dir else None
+        if aot_cache is None:
+            aot_cache = persist.aot_cache_enabled()
+        self._aot: Optional[persist.AOTCache] = None
+        self._ckpt: Optional[CheckpointManager] = None
+        if self.persist_dir:
+            if aot_cache:
+                self._aot = persist.AOTCache(
+                    os.path.join(self.persist_dir, "aot"), self.stats)
+            self._ckpt = CheckpointManager(
+                os.path.join(self.persist_dir, "snapshots"),
+                async_save=False, keep=snapshot_keep)
+            persist.enable_jax_compilation_cache(
+                os.path.join(self.persist_dir, "xla"))
 
     @property
     def warm_capacity(self) -> int:
+        """Exact warm-start store capacity (entries)."""
         return self._carries.capacity
 
     def clear_carries(self) -> None:
         """Drop every stored warm-start carry (exact and similarity)."""
         self._carries.clear()
+
+    @property
+    def config_digest(self) -> str:
+        """Digest guarding everything persisted by this service: resolved
+        kernel backend + all ``PSOConfig`` fields + shape-bucketing
+        parameters + jax version/platform + mesh-ness. AOT executables
+        and snapshots from a process whose digest differs are ignored."""
+        return kernel_backend.config_digest(
+            self.cfg,
+            extra=("svc-v1", jax.__version__, jax.default_backend(),
+                   self.n_multiple, self.m_multiple, self.batch_classes,
+                   self.mesh is not None))
 
     # -- caches ------------------------------------------------------------
 
@@ -459,62 +598,97 @@ class MatcherService:
             self.stats.compile_cache_hits += 1
         return fn
 
-    def _executable(self, bucket: Tuple[int, int]):
-        fn = self._cache_get(bucket)
+    def _count_first_call(self, fn):
+        """Wrap a live-jit executable so its lazy first-call trace shows
+        up in ``stats.jit_traces`` (the observable the AOT cache zeroes
+        out across restarts)."""
+        fired: List[int] = []
+
+        def wrapped(*args):
+            if not fired:
+                fired.append(1)
+                self.stats.jit_traces += 1
+            return fn(*args)
+
+        return wrapped
+
+    def _resolve_executable(self, cache_key, kind: str,
+                            bucket: Tuple[int, int], bclass: int, build):
+        """Compile-LRU lookup with the on-disk AOT layer behind it.
+
+        Miss order: (1) in-memory LRU; (2) deserialized ``jax.export``
+        blob — runs with NO Python trace; (3) ``build()`` a live jit
+        function, which traces on first call and (when exportable and
+        persistence is on) serializes itself to disk for the next
+        process. Every path lands in the LRU under ``cache_key``."""
+        fn = self._cache_get(cache_key)
         if fn is not None:
             return fn
         self.stats.compile_cache_misses += 1
-        if self.mesh is None:
-            cfg = self.cfg
+        if self._aot is not None:
+            aot_key = f"{kind}-n{bucket[0]}m{bucket[1]}-b{bclass}" \
+                      f"-{self.config_digest}"
+            loaded = self._aot.load(aot_key, build)
+            if loaded is not None:
+                self.stats.aot_cache_hits += 1
+                return self._cache_put(cache_key, loaded)
+            self.stats.aot_cache_misses += 1
+            built = build()
+            if getattr(built, "aot_exportable", True):
+                return self._cache_put(
+                    cache_key, self._aot.wrap_exporting(aot_key, built))
+            return self._cache_put(cache_key, self._count_first_call(built))
+        return self._cache_put(cache_key, self._count_first_call(build()))
 
-            def fn(key, Q, G, mask, carry0, _cfg=cfg):
-                return pso._match_body(key, Q, G, mask, _cfg, carry0)
+    def _executable(self, bucket: Tuple[int, int]):
+        """Single-problem swarm executable for one shape bucket."""
+        def build():
+            if self.mesh is None:
+                cfg = self.cfg
 
-            fn = jax.jit(fn)
-        else:
-            fn = build_distributed_match(bucket, self.mesh, self.cfg,
-                                         self.axis_names)
-        return self._cache_put(bucket, fn)
+                def fn(key, Q, G, mask, carry0, _cfg=cfg):
+                    return pso._match_body(key, Q, G, mask, _cfg, carry0)
+
+                return jax.jit(fn)
+            return build_distributed_match(bucket, self.mesh, self.cfg,
+                                           self.axis_names)
+
+        return self._resolve_executable(bucket, "match", bucket, 1, build)
 
     def _executable_batch(self, bucket: Tuple[int, int], bclass: int):
         """One swarm executable per (shape bucket, padded batch class)."""
-        cache_key = (bucket, bclass)
-        fn = self._cache_get(cache_key)
-        if fn is not None:
-            return fn
-        self.stats.compile_cache_misses += 1
-        if self.mesh is None:
-            cfg = self.cfg
+        def build():
+            if self.mesh is None:
+                cfg = self.cfg
 
-            def fn(keys, Qb, Gb, maskb, carry0, _cfg=cfg):
-                return pso._match_batch_body(keys, Qb, Gb, maskb, _cfg,
-                                             carry0)
+                def fn(keys, Qb, Gb, maskb, carry0, _cfg=cfg):
+                    return pso._match_batch_body(keys, Qb, Gb, maskb, _cfg,
+                                                 carry0)
 
-            fn = jax.jit(fn)
-        else:
-            fn = build_distributed_match_batch(bucket, self.mesh, self.cfg,
-                                               self.axis_names, bclass)
-        return self._cache_put(cache_key, fn)
+                return jax.jit(fn)
+            return build_distributed_match_batch(bucket, self.mesh,
+                                                 self.cfg, self.axis_names,
+                                                 bclass)
+
+        return self._resolve_executable((bucket, bclass), "batch",
+                                        bucket, bclass, build)
 
     def _executable_reval(self, bucket: Tuple[int, int], bclass: int):
         """Tier-0/1 revalidation executable (no epochs, no keys)."""
-        cache_key = (bucket, bclass, "reval")
-        fn = self._cache_get(cache_key)
-        if fn is not None:
-            return fn
-        self.stats.compile_cache_misses += 1
-        if self.mesh is None:
-            cfg = self.cfg
+        def build():
+            if self.mesh is None:
+                cfg = self.cfg
 
-            def fn(Qb, Gb, maskb, carry0, _cfg=cfg):
-                return pso._revalidate_batch_body(Qb, Gb, maskb, _cfg,
-                                                  carry0)
+                def fn(Qb, Gb, maskb, carry0, _cfg=cfg):
+                    return pso._revalidate_batch_body(Qb, Gb, maskb, _cfg,
+                                                      carry0)
 
-            fn = jax.jit(fn)
-        else:
-            fn = build_distributed_revalidate_batch(
+                return jax.jit(fn)
+            return build_distributed_revalidate_batch(
                 bucket, self.mesh, self.cfg, self.axis_names, bclass)
-        return self._cache_put(cache_key, fn)
+
+        return self._resolve_executable((bucket, bclass, "reval"), "reval",
+                                        bucket, bclass, build)
 
     def _batch_class(self, k: int) -> int:
         """Smallest padded batch class holding k problems."""
@@ -553,6 +727,115 @@ class MatcherService:
                 and req.engine_sig is not None):
             self._carries.put_similar(req.qdigest, req.bucket,
                                       req.engine_sig, res.carry)
+
+    # -- snapshots ---------------------------------------------------------
+
+    def save_snapshot(self, step: Optional[int] = None,
+                      extra: Optional[Dict] = None) -> int:
+        """Persist the service's warm state as one atomic checkpoint.
+
+        Saved: every :class:`CarryStore` entry (exact and similarity,
+        in LRU order; carries land as one ``.npy`` leaf per array) plus
+        the prune-sweep calibration counters
+        (``prune_problems``/``prune_sweeps`` — the observable the
+        scheduler's analytic cost model reads). NOT saved: compiled
+        executables (the AOT cache owns those), transient stats, pending
+        requests. ``extra`` (JSON-serializable) rides in the snapshot
+        metadata — the scheduler stores its tier-predictor posteriors
+        there. Entries whose keys cannot be encoded (non-str/int/bytes/
+        tuple workload keys) are skipped and counted
+        (``snapshot_skipped_keys``). Returns the committed step number.
+        Requires ``persist_dir``."""
+        if self._ckpt is None:
+            raise RuntimeError("save_snapshot needs persist_dir "
+                               "(or REPRO_PERSIST_DIR)")
+        exact_items, sim_items = self._carries.export_state()
+        arrays: Dict[str, np.ndarray] = {}
+        exact_keys, exact_carries = [], []
+        for k, c in exact_items:
+            try:
+                exact_keys.append(persist.encode_key(k))
+            except TypeError:
+                self.stats.snapshot_skipped_keys += 1
+                continue
+            exact_carries.append(c)
+        sim_keys, sim_carries = [], []
+        for k, c in sim_items:
+            try:
+                sim_keys.append(persist.encode_key(k))
+            except TypeError:
+                self.stats.snapshot_skipped_keys += 1
+                continue
+            sim_carries.append(c)
+        arrays.update(persist.carry_leaves("exact", exact_carries))
+        arrays.update(persist.carry_leaves("sim", sim_carries))
+        # flat-dict checkpoints must be non-empty for restore_flat to see
+        # a committed structure even when no carries are stored yet
+        arrays["snapshot.marker"] = np.zeros((), np.int8)
+        extras = {
+            "format_version": persist.SNAPSHOT_VERSION,
+            "config_digest": self.config_digest,
+            "exact_keys": exact_keys,
+            "sim_keys": sim_keys,
+            "calibration": {
+                "prune_problems": int(self.stats.prune_problems),
+                "prune_sweeps": int(self.stats.prune_sweeps),
+            },
+            "extra": extra or {},
+        }
+        if step is None:
+            latest = self._ckpt.latest_step()
+            step = 0 if latest is None else latest + 1
+        self._ckpt.save(step, arrays, extras=extras)
+        self._ckpt.wait()
+        self.stats.snapshot_saves += 1
+        return step
+
+    def restore_snapshot(self, step: Optional[int] = None
+                         ) -> Optional[Dict]:
+        """Load the newest (or ``step``-th) snapshot into this service.
+
+        Validation before anything is touched: the snapshot's format
+        version and ``config_digest`` must match this service's — a
+        snapshot written under a different kernel backend, ``PSOConfig``,
+        bucketing, jax version or platform is counted in
+        ``snapshot_stale_skipped`` and ignored (warm state from a
+        drifted config could verify carries that no longer mean the same
+        thing). On success the :class:`CarryStore` is rebuilt (recency
+        preserved, similarity popcount index reconstructed), the
+        prune-sweep calibration counters are re-seeded, and the
+        snapshot's ``extra`` dict is returned (``{}`` when none was
+        stored). Returns None when nothing (valid) exists to restore.
+        Requires ``persist_dir``."""
+        if self._ckpt is None:
+            raise RuntimeError("restore_snapshot needs persist_dir "
+                               "(or REPRO_PERSIST_DIR)")
+        try:
+            arrays, extras = self._ckpt.restore_flat(step)
+        except (OSError, ValueError, KeyError):
+            arrays, extras = None, None
+        if arrays is None:
+            return None
+        if extras.get("format_version") != persist.SNAPSHOT_VERSION or \
+                extras.get("config_digest") != self.config_digest:
+            self.stats.snapshot_stale_skipped += 1
+            return None
+        exact_keys = [persist.decode_key(k) for k in extras["exact_keys"]]
+        sim_keys = [persist.decode_key(k) for k in extras["sim_keys"]]
+        exact_carries = persist.carries_from_leaves(
+            "exact", arrays, len(exact_keys))
+        sim_carries = persist.carries_from_leaves(
+            "sim", arrays, len(sim_keys))
+        n_exact, n_sim = self._carries.import_state(
+            list(zip(exact_keys, exact_carries)),
+            list(zip(sim_keys, sim_carries)))
+        calib = extras.get("calibration", {})
+        self.stats.prune_problems += int(calib.get("prune_problems", 0))
+        self.stats.prune_sweeps += int(calib.get("prune_sweeps", 0))
+        self.stats.snapshot_restores += 1
+        self.stats.restored_carries += n_exact
+        self.stats.restored_sim_entries += n_sim
+        return extras.get("extra", {})
 
     # -- matching ----------------------------------------------------------
 
@@ -704,6 +987,7 @@ class MatcherService:
 
     @property
     def pending(self) -> int:
+        """Number of submitted problems waiting for the next drain."""
         return len(self._pending)
 
     def drain(self) -> List[ServiceMatchResult]:
@@ -1043,6 +1327,10 @@ class MatcherService:
     # -- reporting ---------------------------------------------------------
 
     def stats_dict(self) -> Dict[str, float]:
+        """Flat ``{counter: value}`` export of :class:`ServiceStats`
+        plus derived rates and per-tier breakdowns — the payload
+        ``SimResult.matcher_stats`` surfaces (see the README stats
+        glossary for per-key meanings)."""
         s = self.stats
         out = {
             "calls": s.calls,
@@ -1071,6 +1359,18 @@ class MatcherService:
             "sim_neighbor_hits": s.sim_neighbor_hits,
             "sim_evictions": s.sim_evictions,
             "sim_entries": self._carries.sim_entries,
+            "jit_traces": s.jit_traces,
+            "aot_cache_hits": s.aot_cache_hits,
+            "aot_cache_misses": s.aot_cache_misses,
+            "aot_exports": s.aot_exports,
+            "aot_export_failures": s.aot_export_failures,
+            "aot_call_fallbacks": s.aot_call_fallbacks,
+            "snapshot_saves": s.snapshot_saves,
+            "snapshot_restores": s.snapshot_restores,
+            "snapshot_stale_skipped": s.snapshot_stale_skipped,
+            "snapshot_skipped_keys": s.snapshot_skipped_keys,
+            "restored_carries": s.restored_carries,
+            "restored_sim_entries": s.restored_sim_entries,
         }
         for name in ("tier0", "tier1", "tier2"):
             t: TierStats = getattr(s, name)

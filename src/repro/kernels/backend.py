@@ -38,6 +38,8 @@ optimize, and call :func:`register_backend`.
 """
 from __future__ import annotations
 
+import dataclasses
+import hashlib
 import os
 from typing import Dict, Optional, Tuple
 
@@ -171,12 +173,16 @@ class KernelBackend:
     # -- quantization helpers ----------------------------------------------
 
     def quantize_s(self, S, scale: int = 255):
+        """Quantize relaxed mappings S ∈ [0,1] to uint8 (× ``scale``)."""
         return ref.quantize_s(S, scale)
 
     def dequantize_s(self, S_q, scale: int = 255):
+        """Inverse of :meth:`quantize_s`: uint8 S_q → float32 / scale."""
         return ref.dequantize_s(S_q, scale)
 
     def row_normalize_quantized(self, S_q, mask, scale: int = 255):
+        """Divide-free row renormalization of a quantized (n, m) S_q
+        (reciprocal-multiply model of the accelerator datapath)."""
         return ref.row_normalize_quantized(S_q, mask, scale)
 
 
@@ -241,3 +247,32 @@ def for_config(cfg) -> KernelBackend:
     """The backend a (static) ``PSOConfig`` selects — the one call core/
     makes at trace time."""
     return get_backend(config=cfg)
+
+
+def config_digest(cfg, *, extra: Tuple = ()) -> str:
+    """Stable content digest of everything that shapes a compiled kernel.
+
+    The on-disk AOT executable cache and the service snapshots both need
+    a key that changes whenever a recompiled program could differ or a
+    stored carry could stop being meaningful. This digest covers:
+
+      * the **resolved backend suite name** (the full selection
+        precedence, so flipping ``REPRO_KERNEL_BACKEND`` or
+        ``PSOConfig.backend`` invalidates cached executables),
+      * every field of the (frozen dataclass) config, sorted by name —
+        any ``PSOConfig`` knob that alters the traced program changes
+        the digest,
+      * caller-supplied ``extra`` components (the service adds its shape
+        bucketing parameters, jax version, and target platform).
+
+    Returns a 16-hex-char prefix of the SHA-1 — collision-safe at cache
+    sizes (dozens of executables), short enough for file names. Configs
+    that are not dataclasses fall back to ``repr`` (stable for the
+    ``PSOConfig``-like objects this repo passes)."""
+    name = resolve_backend_name(config=cfg)
+    if dataclasses.is_dataclass(cfg):
+        fields = sorted(dataclasses.asdict(cfg).items())
+    else:  # pragma: no cover - non-dataclass configs
+        fields = repr(cfg)
+    payload = repr((name, fields, tuple(extra)))
+    return hashlib.sha1(payload.encode("utf-8")).hexdigest()[:16]

@@ -79,6 +79,28 @@ def pipeline_tier_rates(result: SimResult) -> Dict[str, float]:
     return out
 
 
+def warm_restart_stats(result: SimResult) -> Dict[str, float]:
+    """Warm-restart persistence counters for one run.
+
+    Groups the restart-path observables: how many scheduler-process
+    kill/restart events the run saw, what a restore brought back
+    (carries / similarity entries / predictor posteriors), and the AOT
+    executable-cache counters — ``jit_traces`` is the headline: a warm
+    restart that re-traced nothing keeps it at 0 for the restarted
+    process. All keys default to 0 for schedulers without a service."""
+    ms = result.matcher_stats
+    keys = ("restart_count", "restart_restored_carries",
+            "restart_restored_sim_entries",
+            "restart_restored_posterior_buckets",
+            "restart_restored_state_sigs", "restart_snapshots_saved",
+            "restart_boot_restores",
+            "jit_traces", "aot_cache_hits", "aot_cache_misses",
+            "aot_exports", "aot_export_failures", "aot_call_fallbacks",
+            "snapshot_saves", "snapshot_restores",
+            "snapshot_stale_skipped")
+    return {k: ms.get(k, 0) for k in keys}
+
+
 def latency_bound_throughput(scheduler_name: str, platform: Platform,
                              complexity: str, *,
                              hit_target: float = 0.95,

@@ -65,10 +65,27 @@ class SchedulerBase:
         self.cpu_free_at = 0.0
         self._pdag_cache: Dict = {}
         self._reserved: Dict[int, List[int]] = {}   # task_id -> engines
+        self._restart_count = 0
 
     def matcher_stats(self) -> Dict[str, float]:
         """Online matcher-service counters; {} for schedulers without one."""
         return {}
+
+    def on_restart(self, sim, now: float) -> None:
+        """Scheduler-process kill/restart at ``now`` (simulator event).
+
+        Base semantics: everything living in the scheduler's host
+        process dies — the query-window cache, engine reservations (the
+        accelerator keeps running its dispatched tasks; only the
+        scheduler's bookkeeping of promised engines is lost) and any
+        queued host-CPU scheduling work (a fresh process has a free
+        CPU). Subclasses lose their matcher/memo state on top, and
+        IMMSched snapshots/restores through the persistence layer when
+        ``sim.cfg.persist_dir`` is set."""
+        self._restart_count += 1
+        self._pdag_cache.clear()
+        self._reserved.clear()
+        self.cpu_free_at = now
 
     # -- engine bookkeeping ------------------------------------------------
 
@@ -173,17 +190,98 @@ class IMMSchedScheduler(SchedulerBase):
 
     def reset(self, sim):
         super().reset(sim)
+        self._tier_decisions = {"tier0": 0, "tier1": 0, "tier2": 0}
+        self._restart_stats = {"restored_carries": 0,
+                               "restored_sim_entries": 0,
+                               "restored_posterior_buckets": 0,
+                               "restored_state_sigs": 0,
+                               "snapshots_saved": 0,
+                               "boot_restores": 0}
+        self._boot_service(sim)
+
+    def _boot_service(self, sim, from_restart: bool = False) -> None:
+        """(Re)create the host-process matcher state: the online service,
+        the tier predictor's platform-state index and the calibrated
+        Tier-1 posterior. With ``sim.cfg.persist_dir`` set the service
+        gets the on-disk AOT executable cache and the newest valid
+        snapshot (carries + predictor posteriors) is restored — a warm
+        boot; otherwise every structure starts cold (``persist_dir=None``
+        explicitly disables the service's env-var fallback so the cold
+        arm never warms up from ``REPRO_PERSIST_DIR``). Restores are
+        attributed to the ``restart_restored_*`` counters only when this
+        boot follows an in-run restart event; a warm boot at simulation
+        start (a previous run's snapshot) counts in ``boot_restores``."""
         # online matcher service: compiled-shape cache + warm starts keyed
         # by (workload, free-engine set), early-exit epochs, tiered drain
         cfg = sim.cfg.pso_cfg.replace(quantized=self.quantized)
-        self._service = MatcherService(cfg)
-        self._tier_decisions = {"tier0": 0, "tier1": 0, "tier2": 0}
+        persist_dir = getattr(sim.cfg, "persist_dir", None)
+        self._service = MatcherService(cfg,
+                                       persist_dir=persist_dir or False)
         # per workload: LRU of seen platform states, sig → unpacked bits
         self._state_index: Dict[str, "OrderedDict[bytes, np.ndarray]"] = {}
         # observed Tier-1 rebase outcomes per (workload, popcount band of
         # the engine signature): [successes, trials]
         self._tier1_obs: Dict[tuple, List[int]] = {}
         self._prune_stats = {"launches": 0, "wall_s": 0.0, "energy_j": 0.0}
+        if persist_dir:
+            extra = self._service.restore_snapshot()
+            if extra is not None:
+                self._restore_predictor(extra.get("predictor", {}),
+                                        count=from_restart)
+                if from_restart:
+                    self._restart_stats["restored_carries"] += \
+                        self._service.stats.restored_carries
+                    self._restart_stats["restored_sim_entries"] += \
+                        self._service.stats.restored_sim_entries
+                else:
+                    self._restart_stats["boot_restores"] += 1
+
+    def on_restart(self, sim, now):
+        """Kill/restart of the scheduler process (simulator event).
+
+        Graceful when persistence is on: the service snapshots its warm
+        state with the tier predictor's posteriors riding in the
+        snapshot's ``extra`` dict, then every host structure is dropped
+        (process death) and ``_boot_service`` restores from disk. With
+        no ``persist_dir`` this is a cold restart: carries, compile LRU,
+        predictor history and calibration all start over — the baseline
+        arm of ``benchmarks/bench_restart.py``."""
+        persist_dir = getattr(sim.cfg, "persist_dir", None)
+        if persist_dir and self._service is not None:
+            self._service.save_snapshot(
+                extra={"predictor": self._predictor_state()})
+            self._restart_stats["snapshots_saved"] += 1
+        super().on_restart(sim, now)
+        self._boot_service(sim, from_restart=True)
+
+    # -- predictor snapshot codecs ---------------------------------------
+
+    def _predictor_state(self) -> Dict:
+        """JSON-safe encoding of the tier predictor: the per-workload
+        platform-state LRU (signatures only — bit vectors are re-derived
+        on load) and the calibrated Tier-1 posterior counts."""
+        return {
+            "state_index": [[name, [sig.hex() for sig in sigs]]
+                            for name, sigs in self._state_index.items()],
+            "tier1_obs": [[name, band, h, t]
+                          for (name, band), (h, t)
+                          in self._tier1_obs.items()],
+        }
+
+    def _restore_predictor(self, d: Dict, count: bool = True) -> None:
+        """Inverse of ``_predictor_state`` (tolerates missing keys so a
+        snapshot written by a service without a scheduler restores as a
+        plain carry restore). ``count=False`` restores without touching
+        the ``restart_restored_*`` counters (boot-time warm boots)."""
+        for name, sigs in d.get("state_index", []):
+            for hex_sig in sigs:
+                self._note_state(name, bytes.fromhex(hex_sig))
+                if count:
+                    self._restart_stats["restored_state_sigs"] += 1
+        for name, band, h, t in d.get("tier1_obs", []):
+            self._tier1_obs[(name, int(band))] = [int(h), int(t)]
+            if count:
+                self._restart_stats["restored_posterior_buckets"] += 1
 
     def matcher_stats(self) -> Dict[str, float]:
         d = self._service.stats_dict() if self._service else {}
@@ -194,6 +292,9 @@ class IMMSchedScheduler(SchedulerBase):
         d["sched_tier1_calib_trials"] = sum(v[1] for v in obs.values())
         for k, v in getattr(self, "_prune_stats", {}).items():
             d[f"sched_prune_{k}"] = v
+        d["restart_count"] = getattr(self, "_restart_count", 0)
+        for k, v in getattr(self, "_restart_stats", {}).items():
+            d[f"restart_{k}"] = v
         return d
 
     # -- warm-state predictor (mirrors the service carry store) ----------
@@ -492,10 +593,19 @@ class IsoSchedScheduler(SchedulerBase):
         self._memo_hits = 0
         self._memo_misses = 0
 
+    def on_restart(self, sim, now):
+        """IsoSched keeps all matcher state on the host CPU, so a process
+        restart flushes the memo cache unconditionally — the serial
+        baseline has no persistence story, which is part of what
+        ``bench_restart`` measures against."""
+        super().on_restart(sim, now)
+        self._memo.clear()
+
     def matcher_stats(self) -> Dict[str, float]:
         return {"memo_hits": self._memo_hits,
                 "memo_misses": self._memo_misses,
-                "memo_entries": len(getattr(self, "_memo", {}))}
+                "memo_entries": len(getattr(self, "_memo", {})),
+                "restart_count": getattr(self, "_restart_count", 0)}
 
     def on_event(self, sim, now, tasks, trigger, arrived=None):
         if trigger == "activate":

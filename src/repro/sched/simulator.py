@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+from collections import deque
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -54,6 +55,12 @@ class SimConfig:
                                           inner_steps=8))
     window_stages: int = 4
     seed: int = 0
+    # Warm-restart persistence root for schedulers that keep host state
+    # (IMMSched's matcher service + tier predictor). None = a scenario
+    # restart event is a COLD restart (all host state lost); a directory
+    # enables snapshot-before-kill + restore-after (and the service's
+    # on-disk AOT executable cache) — the warm-restart arm.
+    persist_dir: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -148,6 +155,7 @@ class Simulator:
         tasks = [self._admit(spec) for spec in scenario.tasks]
         arrivals = [(t.spec.arrival, i) for i, t in enumerate(tasks)]
         heapq.heapify(arrivals)
+        restarts = deque(getattr(scenario, "restarts", ()))
         now = 0.0
         busy_integral = 0.0
         sched_energy = 0.0
@@ -176,7 +184,8 @@ class Simulator:
             t_arr = arrivals[0][0] if arrivals else float("inf")
             t_done, done_task = next_completion()
             t_act = next_activation()
-            t_next = min(t_arr, t_done, t_act)
+            t_res = restarts[0] if restarts else float("inf")
+            t_next = min(t_arr, t_done, t_act, t_res)
             if t_next == float("inf") or t_next > horizon:
                 break
             # ---- advance time, drain work, integrate energy ----
@@ -194,6 +203,15 @@ class Simulator:
                     busy_integral += len(t.engines) * dt
                 now = t_next
 
+            if t_res <= min(t_arr, t_done, t_act):
+                # scheduler-process kill/restart: host state dies (or is
+                # snapshot-restored under cfg.persist_dir); tasks running
+                # on the accelerator are unaffected. Restarts outrank
+                # same-instant arrivals so those arrivals hit the
+                # restarted (worst-case cold) scheduler.
+                restarts.popleft()
+                sched.on_restart(self, now)
+                continue
             if t_done <= min(t_arr, t_act) and done_task is not None:
                 done_task.par_es = max(done_task.par_es, 0.0)
                 done_task.ser_s = max(done_task.ser_s, 0.0)

@@ -31,11 +31,20 @@ class Scenario:
     name: str
     tasks: List[TaskSpec]
     horizon: float
+    #: Scheduler-process kill/restart instants (seconds). At each time the
+    #: simulator delivers an ``on_restart`` to the scheduler: its host
+    #: process state (compile caches, warm carries, predictor history,
+    #: host-CPU queue) dies; tasks already running on the accelerator
+    #: keep their engines. With ``SimConfig.persist_dir`` set the
+    #: scheduler snapshots before dying and restores after — the
+    #: warm-restart path this repo's persistence layer exists for.
+    restarts: List[float] = dataclasses.field(default_factory=list)
 
     def __post_init__(self):
         self.tasks.sort(key=lambda t: t.arrival)
         for i, t in enumerate(self.tasks):
             t.task_id = i
+        self.restarts = sorted(float(r) for r in self.restarts)
 
 
 def make_scenario(complexity: str, *, rate_hz: float = 20.0,
@@ -160,6 +169,44 @@ def make_mixed_burst_scenario(easy: str = "simple", hard: str = "complex",
 
     name = f"mixed-{easy}-{hard}-burst{burst_size}"
     return Scenario(name=name, tasks=tasks, horizon=horizon)
+
+
+def make_restart_scenario(complexity: str = "simple", *,
+                          rate_hz: float = 20.0,
+                          phase_horizon: float = 0.5,
+                          burst_size: int = 4,
+                          burst_frac: float = 0.6,
+                          urgent_frac: float = 0.4,
+                          restart_gap: float = 1e-3,
+                          seed: int = 0, **kw) -> Scenario:
+    """Kill/restart stress scenario: identical traffic before and after.
+
+    Phase 1 is a compound-Poisson burst stream over ``[0,
+    phase_horizon)``; the scheduler process is killed at
+    ``phase_horizon`` (+ ``restart_gap``, so in-flight same-instant
+    arrivals land before the kill) and phase 2 **replays the exact same
+    workloads and burst pattern** shifted after the restart. Every
+    phase-2 arrival is therefore a repeat the scheduler has already
+    solved — a warm-restarted scheduler (``SimConfig.persist_dir``)
+    serves them from restored carries/posteriors at revalidation cost,
+    while a cold restart pays the full first-arrival path again. The
+    cold-vs-warm gap in post-restart scheduling latency / deadline tail
+    is exactly what ``benchmarks/bench_restart.py`` measures.
+
+    Extra ``kw`` pass through to :func:`make_scenario` (both phases).
+    """
+    base = make_scenario(complexity, rate_hz=rate_hz,
+                         horizon=phase_horizon, urgent_frac=urgent_frac,
+                         burst_size=burst_size, burst_frac=burst_frac,
+                         seed=seed, **kw)
+    kill_at = phase_horizon + restart_gap
+    replay = [dataclasses.replace(
+        t, arrival=t.arrival + kill_at,
+        deadline=t.deadline + kill_at) for t in base.tasks]
+    return Scenario(name=f"{base.name}-restart",
+                    tasks=base.tasks + replay,
+                    horizon=2 * phase_horizon + restart_gap,
+                    restarts=[kill_at])
 
 
 def fixed_scenario(workloads: Sequence[WorkloadGraph], *,

@@ -1,0 +1,375 @@
+"""Warm-restart persistence: AOT executable cache, snapshot round trips,
+digest validation, restart events in the simulator, and the codec layer."""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.accel import EDGE
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import graphs, persist, pso
+from repro.core.service import MatcherService
+from repro.kernels import backend as kernel_backend
+from repro.sched import SimConfig, Simulator, get_scheduler
+from repro.sched.metrics import warm_restart_stats
+from repro.sched.tasks import make_restart_scenario, make_scenario
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = pso.PSOConfig(num_particles=8, epochs=2, inner_steps=4)
+
+
+def _planted(seed, n=6, m=12, edge_prob=0.35):
+    key = jax.random.PRNGKey(seed)
+    kq, kt = jax.random.split(key)
+    q = graphs.random_dag(kq, n, edge_prob)
+    g = graphs.embed_query_in_target(kt, q, m)
+    return q, g
+
+
+def _warm_service(tmp, seeds=(1, 2, 3), persist_dir=True):
+    """Service that has served (cold) and re-served (warm) a burst, so
+    both the batch and revalidate executables exist and every problem
+    has a stored carry."""
+    svc = MatcherService(CFG, persist_dir=str(tmp) if persist_dir else None)
+    probs = [_planted(s) for s in seeds]
+    wks = [f"wl/{s}" for s in seeds]
+    cold = svc.match_many(probs, workload_keys=wks)
+    warm = svc.match_many(probs, workload_keys=wks)
+    return svc, probs, wks, cold, warm
+
+
+# ---------------------------------------------------------------------------
+# codec layer
+# ---------------------------------------------------------------------------
+
+def test_key_codec_roundtrip():
+    keys = [
+        ("wl/1", 8, 16, "abcd"),
+        (("mobilenetv2", b"\x01\x02\xff"), 8, 16, "ff" * 20),
+        ("plain", None, 1.5, True),
+        ("digest", (8, 16), b""),
+    ]
+    for k in keys:
+        assert persist.decode_key(persist.encode_key(k)) == k
+
+
+def test_key_codec_rejects_unencodable():
+    with pytest.raises(TypeError):
+        persist.encode_key((object(),))
+
+
+def test_carry_leaves_roundtrip():
+    rng = np.random.default_rng(0)
+    carries = [(rng.random((4, 8), dtype=np.float32),
+                np.float32(i), rng.random((4, 8), dtype=np.float32))
+               for i in range(3)]
+    leaves = persist.carry_leaves("x", carries)
+    back = persist.carries_from_leaves("x", leaves, 3)
+    for a, b in zip(carries, back):
+        for u, v in zip(a, b):
+            assert np.array_equal(np.asarray(u), np.asarray(v))
+
+
+def test_config_digest_sensitivity():
+    d0 = kernel_backend.config_digest(CFG)
+    assert d0 == kernel_backend.config_digest(
+        pso.PSOConfig(num_particles=8, epochs=2, inner_steps=4))
+    assert d0 != kernel_backend.config_digest(CFG.replace(epochs=3))
+    assert d0 != kernel_backend.config_digest(CFG.replace(backend="ref")) \
+        or kernel_backend.resolve_backend_name(config=CFG) == "ref"
+    assert d0 != kernel_backend.config_digest(CFG, extra=("x",))
+
+
+# ---------------------------------------------------------------------------
+# snapshot round trips
+# ---------------------------------------------------------------------------
+
+def test_snapshot_roundtrip_bitwise_identical(tmp_path):
+    svc1, probs, wks, _, warm = _warm_service(tmp_path)
+    step = svc1.save_snapshot(extra={"who": "test"})
+    assert step == 0 and svc1.stats.snapshot_saves == 1
+
+    svc2 = MatcherService(CFG, persist_dir=str(tmp_path))
+    extra = svc2.restore_snapshot()
+    assert extra == {"who": "test"}
+    assert svc2.stats.restored_carries == len(probs)
+    again = svc2.match_many(probs, workload_keys=wks)
+    for a, b in zip(warm, again):
+        assert a.found == b.found
+        if a.found:
+            assert np.array_equal(np.asarray(a.mapping),
+                                  np.asarray(b.mapping))
+    # every found problem was served without a swarm epoch
+    assert all(r.tier <= 1 for r in again if r.found)
+
+
+def test_snapshot_preserves_lru_recency(tmp_path):
+    svc = MatcherService(CFG, persist_dir=str(tmp_path), warm_capacity=8)
+    seeds = (1, 2, 3, 4)
+    for s in seeds:
+        q, g = _planted(s)
+        svc.match(q, g, workload_key=f"wl/{s}")
+    exact_before, _ = svc._carries.export_state()
+    svc.save_snapshot()
+
+    svc2 = MatcherService(CFG, persist_dir=str(tmp_path), warm_capacity=8)
+    assert svc2.restore_snapshot() == {}
+    exact_after, _ = svc2._carries.export_state()
+    assert [k for k, _ in exact_before] == [k for k, _ in exact_after]
+
+
+def test_stale_digest_snapshot_rejected_cleanly(tmp_path):
+    svc1, *_ = _warm_service(tmp_path)
+    svc1.save_snapshot()
+    drifted = MatcherService(CFG.replace(epochs=3),
+                             persist_dir=str(tmp_path))
+    assert drifted.restore_snapshot() is None
+    assert drifted.stats.snapshot_stale_skipped == 1
+    assert drifted.stats.restored_carries == 0
+    assert len(drifted._carries) == 0
+
+
+def test_future_format_version_rejected(tmp_path):
+    svc1, *_ = _warm_service(tmp_path)
+    svc1.save_snapshot()
+    # doctor the committed extras to a future format version
+    ckpt_dir = os.path.join(str(tmp_path), "snapshots", "step_000000000")
+    with open(os.path.join(ckpt_dir, "extras.json")) as f:
+        extras = json.load(f)
+    extras["format_version"] = persist.SNAPSHOT_VERSION + 1
+    with open(os.path.join(ckpt_dir, "extras.json"), "w") as f:
+        json.dump(extras, f)
+    svc2 = MatcherService(CFG, persist_dir=str(tmp_path))
+    assert svc2.restore_snapshot() is None
+    assert svc2.stats.snapshot_stale_skipped == 1
+
+
+def test_empty_store_snapshot_roundtrip(tmp_path):
+    svc = MatcherService(CFG, persist_dir=str(tmp_path))
+    svc.save_snapshot(extra={"empty": True})
+    svc2 = MatcherService(CFG, persist_dir=str(tmp_path))
+    assert svc2.restore_snapshot() == {"empty": True}
+    assert svc2.stats.restored_carries == 0
+
+
+def test_restore_with_no_snapshot_is_none(tmp_path):
+    svc = MatcherService(CFG, persist_dir=str(tmp_path))
+    assert svc.restore_snapshot() is None
+    assert svc.stats.snapshot_stale_skipped == 0
+
+
+def test_snapshot_requires_persist_dir():
+    svc = MatcherService(CFG)
+    with pytest.raises(RuntimeError):
+        svc.save_snapshot()
+    with pytest.raises(RuntimeError):
+        svc.restore_snapshot()
+
+
+def test_persist_dir_false_overrides_env(tmp_path, monkeypatch):
+    """persist_dir=False must force persistence OFF even under
+    REPRO_PERSIST_DIR — cold-restart baselines depend on it."""
+    monkeypatch.setenv(persist.ENV_PERSIST_DIR, str(tmp_path))
+    off = MatcherService(CFG, persist_dir=False)
+    assert off.persist_dir is None and off._aot is None
+    via_env = MatcherService(CFG)
+    assert via_env.persist_dir == str(tmp_path)
+
+
+def test_scheduler_workload_keys_with_bytes_sig_snapshot(tmp_path):
+    """The scheduler keys warm entries by (name, engine-signature bytes);
+    those keys must survive the JSON codec."""
+    svc = MatcherService(CFG, persist_dir=str(tmp_path))
+    q, g = _planted(5)
+    sig = b"\xf0\x0d"
+    svc.match(q, g, workload_key=("wl", sig), engine_sig=sig)
+    svc.save_snapshot()
+    svc2 = MatcherService(CFG, persist_dir=str(tmp_path))
+    svc2.restore_snapshot()
+    assert svc2.stats.restored_carries == 1
+    r = svc2.match(q, g, workload_key=("wl", sig), engine_sig=sig)
+    assert r.warm_hit
+
+
+# ---------------------------------------------------------------------------
+# AOT executable cache
+# ---------------------------------------------------------------------------
+
+def test_aot_cache_restarted_service_runs_zero_traces(tmp_path):
+    svc1, probs, wks, _, warm = _warm_service(tmp_path)
+    assert svc1.stats.jit_traces > 0
+    assert svc1.stats.aot_exports > 0
+    svc1.save_snapshot()
+
+    svc2 = MatcherService(CFG, persist_dir=str(tmp_path))
+    svc2.restore_snapshot()
+    served = [r for r in svc2.match_many(probs, workload_keys=wks)
+              if r.found]
+    assert served, "warm burst should serve at least one problem"
+    assert all(r.tier <= 1 for r in served)
+    if all(r.found for r in warm):
+        # fully revalidatable burst: the whole drain is AOT-served
+        assert svc2.stats.jit_traces == 0
+    assert svc2.stats.aot_cache_hits >= 1
+
+
+def test_aot_single_match_path_zero_traces(tmp_path):
+    q, g = _planted(7)
+    svc1 = MatcherService(CFG, persist_dir=str(tmp_path))
+    r1 = svc1.match(q, g, workload_key="wl/7")
+    svc1.save_snapshot()
+    svc2 = MatcherService(CFG, persist_dir=str(tmp_path))
+    svc2.restore_snapshot()
+    r2 = svc2.match(q, g, workload_key="wl/7")
+    assert svc2.stats.jit_traces == 0
+    assert svc2.stats.aot_cache_hits == 1
+    assert r2.warm_hit and r1.found == r2.found
+
+
+def test_aot_disabled_still_works(tmp_path):
+    svc1, probs, wks, *_ = _warm_service(tmp_path)
+    svc1.save_snapshot()
+    svc2 = MatcherService(CFG, persist_dir=str(tmp_path), aot_cache=False)
+    svc2.restore_snapshot()
+    res = svc2.match_many(probs, workload_keys=wks)
+    assert svc2.stats.aot_cache_hits == 0
+    assert svc2.stats.jit_traces > 0          # live traces instead
+    assert [r.found for r in res]
+
+
+def test_aot_corrupt_blob_degrades_to_live_trace(tmp_path):
+    svc1, probs, wks, *_ = _warm_service(tmp_path)
+    aot_dir = os.path.join(str(tmp_path), "aot")
+    blobs = sorted(os.listdir(aot_dir))
+    assert blobs
+    for name in blobs:
+        with open(os.path.join(aot_dir, name), "wb") as f:
+            f.write(b"not a serialized module")
+    svc2 = MatcherService(CFG, persist_dir=str(tmp_path))
+    res = svc2.match_many(probs, workload_keys=wks)
+    assert len(res) == len(probs)             # served despite corruption
+    assert svc2.stats.jit_traces > 0
+
+
+def test_aot_key_includes_config_digest(tmp_path):
+    svc1, *_ = _warm_service(tmp_path)
+    svc2 = MatcherService(CFG.replace(inner_steps=5),
+                          persist_dir=str(tmp_path))
+    q, g = _planted(1)
+    svc2.match(q, g)
+    # drifted config never loads the old blobs
+    assert svc2.stats.aot_cache_hits == 0
+    assert svc1.config_digest != svc2.config_digest
+
+
+# ---------------------------------------------------------------------------
+# checkpoint manager flat restore
+# ---------------------------------------------------------------------------
+
+def test_restore_flat_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    arrays = {"a.0.S": np.arange(6, dtype=np.float32).reshape(2, 3),
+              "b": np.int32(7)}
+    mgr.save(3, arrays, extras={"meta": 1})
+    back, extras = mgr.restore_flat()
+    assert extras == {"meta": 1}
+    assert set(back) == set(arrays)
+    assert np.array_equal(back["a.0.S"], arrays["a.0.S"])
+    assert back["b"] == 7
+
+
+def test_restore_flat_empty_store(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    arrays, extras = mgr.restore_flat()
+    assert arrays is None and extras is None
+
+
+def test_restore_flat_rejects_nested(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(0, {"outer": {"inner": np.zeros(2)}})
+    with pytest.raises(ValueError):
+        mgr.restore_flat()
+
+
+# ---------------------------------------------------------------------------
+# simulator restart events
+# ---------------------------------------------------------------------------
+
+def test_restart_scenario_shape():
+    sc = make_restart_scenario("simple", rate_hz=30, phase_horizon=0.2,
+                               seed=3)
+    assert sc.restarts and sc.restarts[0] > 0.2
+    base = make_scenario("simple", rate_hz=30, horizon=0.2,
+                         burst_size=4, burst_frac=0.6, seed=3)
+    assert len(sc.tasks) == 2 * len(base.tasks)
+    names = [t.name for t in sc.tasks]
+    assert names[:len(base.tasks)] == names[len(base.tasks):]
+
+
+def test_sim_restart_cold_clears_predictor_state():
+    sc = make_restart_scenario("simple", rate_hz=30, phase_horizon=0.2,
+                               seed=3)
+    r = Simulator(SimConfig(platform=EDGE),
+                  get_scheduler("immsched")).run(sc)
+    st = warm_restart_stats(r)
+    assert st["restart_count"] == 1
+    assert st["restart_snapshots_saved"] == 0
+    assert st["snapshot_restores"] == 0
+    assert r.finished == r.total
+
+
+def test_sim_restart_warm_restores_predictor_state(tmp_path):
+    sc = make_restart_scenario("simple", rate_hz=30, phase_horizon=0.2,
+                               seed=3)
+    cfg = SimConfig(platform=EDGE, persist_dir=str(tmp_path))
+    r = Simulator(cfg, get_scheduler("immsched")).run(sc)
+    st = warm_restart_stats(r)
+    assert st["restart_count"] == 1
+    assert st["restart_snapshots_saved"] == 1
+    assert st["snapshot_restores"] == 1
+    assert st["restart_restored_state_sigs"] > 0
+    assert r.finished == r.total
+
+
+def test_sim_boot_restore_counted_separately_from_restart(tmp_path):
+    """A second run over the same persist dir warm-boots from the first
+    run's snapshot: that restore shows up as ``restart_boot_restores``,
+    NOT as a ``restart_restored_*`` count (there was no in-run
+    restart-event restore yet when the run began)."""
+    sc = make_restart_scenario("simple", rate_hz=30, phase_horizon=0.2,
+                               seed=3)
+    cfg = SimConfig(platform=EDGE, persist_dir=str(tmp_path))
+    r1 = Simulator(cfg, get_scheduler("immsched")).run(sc)
+    assert warm_restart_stats(r1)["restart_boot_restores"] == 0
+    r2 = Simulator(cfg, get_scheduler("immsched")).run(sc)
+    st2 = warm_restart_stats(r2)
+    assert st2["restart_boot_restores"] == 1
+    # in-run restart restores are still attributed normally
+    assert st2["restart_count"] == 1
+    assert st2["restart_restored_state_sigs"] > 0
+
+
+def test_sim_restart_isosched_flushes_memo():
+    sc = make_restart_scenario("simple", rate_hz=30, phase_horizon=0.2,
+                               seed=3)
+    r = Simulator(SimConfig(platform=EDGE),
+                  get_scheduler("isosched")).run(sc)
+    assert r.matcher_stats["restart_count"] == 1
+    assert r.finished == r.total
+
+
+@pytest.mark.slow
+def test_sim_restart_real_mode_warm(tmp_path):
+    sc = make_restart_scenario("simple", rate_hz=30, phase_horizon=0.2,
+                               seed=3)
+    cfg = SimConfig(platform=EDGE, matcher_mode="real", pso_cfg=CFG,
+                    window_stages=2, persist_dir=str(tmp_path))
+    r = Simulator(cfg, get_scheduler("immsched")).run(sc)
+    st = warm_restart_stats(r)
+    assert st["restart_count"] == 1
+    assert st["snapshot_restores"] == 1
+    assert st["restart_restored_carries"] >= 0  # real launches may or may
+    assert r.finished == r.total                # not store carries here
