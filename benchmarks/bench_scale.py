@@ -1,0 +1,278 @@
+"""Streaming-scale benchmark: ~10^6 arrivals through the event loop.
+
+Four experiments, one per acceptance claim of the streaming simulator +
+async service front end:
+
+  1. **Headline stream** — a generator-backed ``make_streaming_scenario``
+     replaying ~1e6 Poisson arrivals (smoke: ~2e4) through the
+     heap-scheduled event loop at a sustainable rate. Reports
+     p50/p99/p999 scheduling + total latency, simulated and wall-clock
+     throughput, and the bounded-memory evidence: ``peak_live_tasks``
+     (tasks held simultaneously) and process peak RSS — neither scales
+     with the arrival count. A ``truncated`` result aborts the benchmark
+     with a non-zero exit: truncated numbers are a prefix, not a run.
+  2. **Throughput vs load** — small fixed-arrival-count arms at load
+     multipliers spanning the saturation knee; per arm: offered vs
+     finished rate, urgent hit rate, latency percentiles, peak backlog.
+  3. **Async front end** — a real ``MatcherService`` behind
+     ``AsyncServiceFrontEnd``: a deadline-striped request stream drives
+     batch-full / deadline-slack / flush drain triggers and shed-policy
+     admission control; reports the ``fe_*`` counter block.
+  4. **Loop equivalence** — the streaming heap loop vs the legacy
+     full-scan loop on materialized scenarios, compared field-for-field
+     (bitwise; no tolerance) — the oracle check that the rebuild changed
+     complexity, not results.
+
+Emits ``BENCH_scale.json`` and CSV rows on stdout.
+
+Usage: PYTHONPATH=src python -m benchmarks.bench_scale
+           [--arrivals N] [--rate-hz R] [--smoke] [--out FILE]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import resource
+import sys
+import time
+
+import jax
+
+from repro.accel import EDGE
+from repro.core import graphs, pso
+from repro.core.service import AsyncServiceFrontEnd, MatcherService
+from repro.sched import (SimConfig, Simulator, get_scheduler,
+                         make_burst_scenario, make_scenario,
+                         make_streaming_scenario)
+from repro.sched.metrics import frontend_stats
+
+
+def _maxrss_mb() -> float:
+    """Process peak RSS in MiB (ru_maxrss is KiB on Linux)."""
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def _require_complete(r, label: str) -> None:
+    if r.truncated:
+        print(f"FATAL: {label} truncated at {r.events} events "
+              f"(max_events too small) — refusing to report a prefix "
+              f"as a result", file=sys.stderr)
+        sys.exit(1)
+
+
+def _run_stream(rate_hz: float, horizon: float, *, scheduler: str,
+                seed: int, validate: bool = False):
+    sc = make_streaming_scenario("simple", rate_hz=rate_hz,
+                                 horizon=horizon, seed=seed)
+    cfg = SimConfig(platform=EDGE, matcher_mode="analytic",
+                    max_events=None, validate=validate)
+    t0 = time.perf_counter()
+    r = Simulator(cfg, get_scheduler(scheduler)).run(sc)
+    wall = time.perf_counter() - t0
+    return r, wall
+
+
+def bench_headline(rate_hz: float, arrivals: int, scheduler: str,
+                   seed: int = 11):
+    horizon = arrivals / rate_hz
+    r, wall = _run_stream(rate_hz, horizon, scheduler=scheduler, seed=seed)
+    _require_complete(r, "headline stream")
+    return {
+        "scheduler": scheduler,
+        "rate_hz": rate_hz,
+        "horizon_s": horizon,
+        "arrivals": r.total,
+        "finished": r.finished,
+        "events": r.events,
+        "truncated": r.truncated,
+        "urgent_hit_rate": r.urgent_hit_rate,
+        "all_hit_rate": r.all_hit_rate,
+        "avg_total_latency_s": r.avg_total_latency,
+        "avg_sched_time_s": r.avg_sched_time,
+        "percentiles": r.percentiles,
+        "alloc_conflicts": r.alloc_conflicts,
+        "peak_live_tasks": r.peak_live_tasks,
+        "peak_rss_mb": _maxrss_mb(),
+        "wall_s": wall,
+        "wall_events_per_s": r.events / max(wall, 1e-9),
+        "wall_arrivals_per_s": r.total / max(wall, 1e-9),
+        "sim_throughput_tasks_per_s": r.finished / max(r.sim_horizon, 1e-9),
+        "pass": (not r.truncated and r.finished == r.total
+                 and r.alloc_conflicts == 0),
+    }
+
+
+def bench_load_sweep(base_rate_hz: float, arrivals_per_arm: int,
+                     multipliers, scheduler: str, seed: int = 23):
+    arms = []
+    for mult in multipliers:
+        rate = base_rate_hz * mult
+        horizon = arrivals_per_arm / rate
+        r, wall = _run_stream(rate, horizon, scheduler=scheduler,
+                              seed=seed)
+        _require_complete(r, f"load sweep x{mult}")
+        arms.append({
+            "load_multiplier": mult,
+            "offered_rate_hz": rate,
+            "arrivals": r.total,
+            "finished": r.finished,
+            "finished_frac": r.finished / max(r.total, 1),
+            "urgent_hit_rate": r.urgent_hit_rate,
+            "all_hit_rate": r.all_hit_rate,
+            "sim_throughput_tasks_per_s":
+                r.finished / max(r.sim_horizon, 1e-9),
+            "latency_p50_s": r.percentiles.get("latency_p50", 0.0),
+            "latency_p999_s": r.percentiles.get("latency_p999", 0.0),
+            "sched_p999_s": r.percentiles.get("sched_p999", 0.0),
+            "peak_live_tasks": r.peak_live_tasks,
+            "wall_s": wall,
+        })
+    # the curve must actually cross the knee: the heaviest arm should
+    # show a worse deadline hit-rate than the lightest
+    ok = arms[-1]["all_hit_rate"] <= arms[0]["all_hit_rate"]
+    return {"base_rate_hz": base_rate_hz,
+            "arrivals_per_arm": arrivals_per_arm,
+            "scheduler": scheduler, "arms": arms, "pass": ok}
+
+
+def _planted(seed: int, n: int = 8, m: int = 16):
+    key = jax.random.PRNGKey(seed)
+    kq, kt = jax.random.split(key)
+    q = graphs.random_dag(kq, n, 0.35)
+    g = graphs.embed_query_in_target(kt, q, m)
+    return q, g
+
+
+def bench_frontend(cfg: pso.PSOConfig, requests: int):
+    svc = MatcherService(cfg, batch_classes=(1, 2, 4))
+    fe = AsyncServiceFrontEnd(svc, max_depth=8, policy="shed",
+                              slack_threshold_s=0.05)
+    probs = [_planted(i % 6) for i in range(requests)]
+    # warm the batch path so the timed loop measures steady state
+    fe.submit(*probs[0], deadline=0.0, now=0.0)
+    fe.flush(now=0.0)
+
+    t0 = time.perf_counter()
+    rids = []
+    now = 0.0
+    for i, (q, g) in enumerate(probs):
+        now = i * 0.01
+        # stripe deadlines: every 5th request is tight (drives the
+        # deadline trigger); the loose runs between them are long enough
+        # to fill the largest batch class (drives the batch trigger)
+        dl = now + (0.02 if i % 5 == 0 else 10.0)
+        rids.append(fe.submit(q, g, deadline=dl, now=now))
+        fe.poll(now=now + 0.005)
+    fe.flush(now=now + 1.0)
+    wall = time.perf_counter() - t0
+    served = sum(1 for rid in rids if fe.take_result(rid) is not None)
+    fes = frontend_stats(
+        type("R", (), {"matcher_stats": svc.stats_dict()})())
+    return {
+        "requests": requests,
+        "served": served,
+        "wall_s": wall,
+        "stats": fes,
+        "pass": (fes["fe_submitted"] == requests + 1
+                 and fes["fe_admitted"] + fes["fe_shed"]
+                 == fes["fe_submitted"]
+                 and fes["fe_drain_deadline"] > 0
+                 and fes["fe_drain_batch_full"] > 0
+                 and fes["fe_drains"] > 0),
+    }
+
+
+def bench_equivalence(scheduler_names=("immsched", "prema")):
+    scens = [make_scenario("simple", rate_hz=40, horizon=1.0, seed=5),
+             make_burst_scenario("simple", rate_hz=20, horizon=1.0,
+                                 seed=6)]
+    checks = []
+    for name in scheduler_names:
+        for sc in scens:
+            cfg = SimConfig(platform=EDGE, matcher_mode="analytic")
+            a = Simulator(cfg, get_scheduler(name)).run(sc)
+            b = Simulator(cfg, get_scheduler(name)).run_legacy(sc)
+            da, db = dataclasses.asdict(a), dataclasses.asdict(b)
+            diff = sorted(k for k in da if da[k] != db[k])
+            checks.append({"scheduler": name, "scenario": sc.name,
+                           "tasks": len(sc.tasks), "equal": not diff,
+                           "diff_fields": diff})
+    return {"checks": checks,
+            "bitwise_legacy_equal": all(c["equal"] for c in checks)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arrivals", type=int, default=1_000_000,
+                    help="headline stream length (expected arrivals)")
+    ap.add_argument("--rate-hz", type=float, default=5000.0,
+                    help="headline arrival rate (sustainable on EDGE)")
+    ap.add_argument("--scheduler", default="immsched")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI config: ~2e4 arrivals, short sweep")
+    ap.add_argument("--out", default="BENCH_scale.json")
+    args = ap.parse_args()
+
+    if args.smoke:
+        arrivals, arrivals_per_arm = 20_000, 600
+        multipliers = (0.5, 1.0, 2.5)
+        fe_cfg = pso.PSOConfig(num_particles=8, epochs=2, inner_steps=4)
+        fe_requests = 12
+    else:
+        arrivals, arrivals_per_arm = args.arrivals, 3_000
+        multipliers = (0.25, 0.5, 1.0, 1.6, 2.0, 2.4)
+        fe_cfg = pso.PSOConfig(num_particles=16, epochs=2, inner_steps=8)
+        fe_requests = 48
+
+    headline = bench_headline(args.rate_hz, arrivals, args.scheduler)
+    sweep = bench_load_sweep(args.rate_hz * 0.8, arrivals_per_arm,
+                             multipliers, args.scheduler)
+    frontend = bench_frontend(fe_cfg, fe_requests)
+    equiv = bench_equivalence()
+
+    result = {
+        "smoke": bool(args.smoke),
+        "platform": EDGE.name,
+        "headline": headline,
+        "load_sweep": sweep,
+        "frontend": frontend,
+        "equivalence": equiv,
+        "pass": (headline["pass"] and sweep["pass"] and frontend["pass"]
+                 and equiv["bitwise_legacy_equal"]),
+    }
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+
+    p = headline["percentiles"]
+    print("name,value,derived")
+    print(f"scale_arrivals,{headline['arrivals']},"
+          f"peak_live={headline['peak_live_tasks']}"
+          f"_rss_mb={headline['peak_rss_mb']:.0f}")
+    print(f"scale_wall_arrivals_per_s,"
+          f"{headline['wall_arrivals_per_s']:.0f},"
+          f"events_per_s={headline['wall_events_per_s']:.0f}")
+    print(f"scale_sched_p50_us,{p.get('sched_p50', 0.0) * 1e6:.1f},"
+          f"p99={p.get('sched_p99', 0.0) * 1e6:.1f}"
+          f"_p999={p.get('sched_p999', 0.0) * 1e6:.1f}")
+    print(f"scale_latency_p999_ms,"
+          f"{p.get('latency_p999', 0.0) * 1e3:.3f},"
+          f"urgent_hit={headline['urgent_hit_rate']:.4f}")
+    for arm in sweep["arms"]:
+        print(f"scale_load_x{arm['load_multiplier']},"
+              f"{arm['sim_throughput_tasks_per_s']:.0f},"
+              f"hit={arm['all_hit_rate']:.3f}"
+              f"_p999_ms={arm['latency_p999_s'] * 1e3:.2f}")
+    fes = frontend["stats"]
+    print(f"scale_frontend_drains,{fes['fe_drains']},"
+          f"deadline={fes['fe_drain_deadline']}"
+          f"_batch={fes['fe_drain_batch_full']}"
+          f"_flush={fes['fe_drain_flush']}_shed={fes['fe_shed']}")
+    ok = result["pass"]
+    print(f"scale_acceptance,0,{'PASS' if ok else 'FAIL'}")
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

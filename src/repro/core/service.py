@@ -162,6 +162,17 @@ class ServiceStats:
     snapshot_skipped_keys: int = 0   # entries with unencodable keys
     restored_carries: int = 0        # exact carries loaded by restore
     restored_sim_entries: int = 0    # similarity entries loaded by restore
+    # -- async front end (AsyncServiceFrontEnd) ------------------------
+    fe_submitted: int = 0            # requests offered to the front end
+    fe_admitted: int = 0             # requests accepted into the queue
+    fe_shed: int = 0                 # rejected by admission control
+    fe_forced_drains: int = 0        # block-policy drains to make room
+    fe_drains: int = 0               # total front-end drain rounds
+    fe_drain_deadline: int = 0       # rounds fired by slack crossing
+    fe_drain_batch_full: int = 0     # rounds fired by a full batch class
+    fe_drain_flush: int = 0          # rounds fired by explicit flush
+    fe_queue_peak: int = 0           # max observed queue depth
+    fe_wait_s: float = 0.0           # total queue-wait time (admit→drain)
     tier0: TierStats = dataclasses.field(default_factory=TierStats)
     tier1: TierStats = dataclasses.field(default_factory=TierStats)
     tier2: TierStats = dataclasses.field(default_factory=TierStats)
@@ -1371,6 +1382,16 @@ class MatcherService:
             "snapshot_skipped_keys": s.snapshot_skipped_keys,
             "restored_carries": s.restored_carries,
             "restored_sim_entries": s.restored_sim_entries,
+            "fe_submitted": s.fe_submitted,
+            "fe_admitted": s.fe_admitted,
+            "fe_shed": s.fe_shed,
+            "fe_forced_drains": s.fe_forced_drains,
+            "fe_drains": s.fe_drains,
+            "fe_drain_deadline": s.fe_drain_deadline,
+            "fe_drain_batch_full": s.fe_drain_batch_full,
+            "fe_drain_flush": s.fe_drain_flush,
+            "fe_queue_peak": s.fe_queue_peak,
+            "fe_wait_s": s.fe_wait_s,
         }
         for name in ("tier0", "tier1", "tier2"):
             t: TierStats = getattr(s, name)
@@ -1380,3 +1401,155 @@ class MatcherService:
             out[f"{name}_hit_rate"] = t.hit_rate
             out[f"{name}_wall_s"] = t.wall_s
         return out
+
+
+@dataclasses.dataclass
+class _QueuedRequest:
+    rid: int
+    query: Graph
+    target: Graph
+    deadline: float
+    enqueued_at: float
+    key: Optional[jax.Array] = None
+    workload_key: object = None
+    engine_sig: Optional[bytes] = None
+
+
+class AsyncServiceFrontEnd:
+    """Admission-controlled arrival queue in front of a MatcherService.
+
+    ``MatcherService.submit``/``drain`` are caller-driven: whoever
+    submits must also decide when to flush, so under sustained load the
+    queue either grows without bound or gets drained one request at a
+    time. This front end owns that decision. Requests enter a bounded
+    queue (``max_depth``); when it is full the ``policy`` either
+    **sheds** the new request (recorded, result ``None``) or **blocks**
+    it by forcing a drain round to make room first. A queued batch is
+    drained through the service's tiered pipeline when either
+
+      * the queue can fill the service's largest batch class
+        (``batch_classes[-1]`` requests queued) — launch-shaped, or
+      * the *oldest* queued request's slack ``deadline - now`` falls to
+        ``slack_threshold_s`` — deadline-shaped (checked at submit time
+        and by ``poll``), or
+      * the caller explicitly ``flush``\\ es.
+
+    Every trigger reason, shed, forced drain, queue peak, and cumulative
+    queue wait flows into the service's ``ServiceStats`` (``fe_*`` keys
+    of ``stats_dict()``), so ``SimResult.matcher_stats`` →
+    ``metrics.frontend_stats`` report it per run.
+
+    Time is an explicit ``now`` parameter everywhere (falling back to
+    ``clock()``), so the front end drops into the event-driven simulator
+    — which advances virtual time — as readily as onto a wall clock.
+    """
+
+    def __init__(self, service: MatcherService, *, max_depth: int = 64,
+                 policy: str = "shed", slack_threshold_s: float = 0.0,
+                 clock=time.perf_counter):
+        assert policy in ("shed", "block"), policy
+        assert max_depth >= 1
+        self.service = service
+        self.max_depth = int(max_depth)
+        self.policy = policy
+        self.slack_threshold_s = float(slack_threshold_s)
+        self._clock = clock
+        self._queue: List[_QueuedRequest] = []
+        self._results: Dict[int, Optional[ServiceMatchResult]] = {}
+        self._next_rid = 0
+
+    # -- observables ---------------------------------------------------
+
+    @property
+    def depth(self) -> int:
+        """Requests currently queued (admitted, not yet drained)."""
+        return len(self._queue)
+
+    def next_deadline_check(self) -> float:
+        """Earliest instant the deadline trigger could fire (the oldest
+        queued deadline minus the slack threshold); +inf when idle. An
+        event-driven host schedules its next ``poll`` here."""
+        if not self._queue:
+            return float("inf")
+        return min(q.deadline for q in self._queue) - self.slack_threshold_s
+
+    # -- request path --------------------------------------------------
+
+    def submit(self, query: Graph, target: Graph, *,
+               deadline: float = float("inf"),
+               now: Optional[float] = None,
+               key: Optional[jax.Array] = None, workload_key=None,
+               engine_sig: Optional[bytes] = None) -> int:
+        """Offer a request; returns a request id for ``take_result``.
+
+        A shed request (queue full under the shed policy) still gets an
+        id — its result is recorded as ``None`` immediately.
+        """
+        now = self._clock() if now is None else now
+        stats = self.service.stats
+        rid = self._next_rid
+        self._next_rid += 1
+        stats.fe_submitted += 1
+        if len(self._queue) >= self.max_depth:
+            if self.policy == "shed":
+                stats.fe_shed += 1
+                self._results[rid] = None
+                return rid
+            stats.fe_forced_drains += 1
+            self._drain(now, "batch_full")
+        self._queue.append(_QueuedRequest(
+            rid=rid, query=query, target=target, deadline=float(deadline),
+            enqueued_at=now, key=key, workload_key=workload_key,
+            engine_sig=engine_sig))
+        stats.fe_admitted += 1
+        stats.fe_queue_peak = max(stats.fe_queue_peak, len(self._queue))
+        self._check_triggers(now)
+        return rid
+
+    def poll(self, now: Optional[float] = None) -> int:
+        """Fire any due drain trigger; returns requests drained (0 if
+        none due). Hosts call this when time passes without submits —
+        e.g. at ``next_deadline_check()``."""
+        now = self._clock() if now is None else now
+        return self._check_triggers(now)
+
+    def flush(self, now: Optional[float] = None) -> int:
+        """Drain everything queued regardless of triggers."""
+        now = self._clock() if now is None else now
+        return self._drain(now, "flush")
+
+    def take_result(self, rid: int) -> Optional[ServiceMatchResult]:
+        """Pop the result for ``rid``: a ``ServiceMatchResult``, or
+        ``None`` if the request was shed. Raises ``KeyError`` while the
+        request is still queued (not drained yet)."""
+        return self._results.pop(rid)
+
+    # -- internals -----------------------------------------------------
+
+    def _check_triggers(self, now: float) -> int:
+        if not self._queue:
+            return 0
+        if len(self._queue) >= self.service.batch_classes[-1]:
+            return self._drain(now, "batch_full")
+        oldest_slack = min(q.deadline for q in self._queue) - now
+        if oldest_slack <= self.slack_threshold_s:
+            return self._drain(now, "deadline")
+        return 0
+
+    def _drain(self, now: float, reason: str) -> int:
+        if not self._queue:
+            return 0
+        stats = self.service.stats
+        stats.fe_drains += 1
+        setattr(stats, f"fe_drain_{reason}",
+                getattr(stats, f"fe_drain_{reason}") + 1)
+        batch, self._queue = self._queue, []
+        tickets = [self.service.submit(q.query, q.target, key=q.key,
+                                       workload_key=q.workload_key,
+                                       engine_sig=q.engine_sig)
+                   for q in batch]
+        results = self.service.drain()
+        for q, ticket in zip(batch, tickets):
+            self._results[q.rid] = results[ticket]
+            stats.fe_wait_s += max(now - q.enqueued_at, 0.0)
+        return len(batch)

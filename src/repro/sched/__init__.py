@@ -1,9 +1,12 @@
-from repro.sched.tasks import (TaskSpec, Scenario, make_burst_scenario,
-                               make_mixed_burst_scenario, make_scenario)
-from repro.sched.simulator import Simulator, SimConfig, SimResult
+from repro.sched.tasks import (TaskSpec, Scenario, StreamScenario,
+                               make_burst_scenario,
+                               make_mixed_burst_scenario, make_scenario,
+                               make_streaming_scenario)
+from repro.sched.simulator import (Simulator, SimConfig, SimResult,
+                                   TaskTable)
 from repro.sched.schedulers import (SCHEDULERS, IMMSchedScheduler,
                                     IsoSchedScheduler, LTSScheduler,
                                     get_scheduler)
-from repro.sched.metrics import (latency_bound_throughput,
+from repro.sched.metrics import (frontend_stats, latency_bound_throughput,
                                  pipeline_tier_rates, speedup_table,
                                  energy_efficiency)

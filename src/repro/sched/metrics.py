@@ -101,6 +101,20 @@ def warm_restart_stats(result: SimResult) -> Dict[str, float]:
     return {k: ms.get(k, 0) for k in keys}
 
 
+def frontend_stats(result: SimResult) -> Dict[str, float]:
+    """Async front-end counters for one run (``core.service``'s
+    ``AsyncServiceFrontEnd``): admission-control outcomes (admitted vs
+    shed vs forced drains under the block policy), drain trigger
+    reasons (deadline-slack crossing / batch class full / manual flush),
+    and queue-depth / waiting-time observables. All keys default to 0
+    for runs that never attach a front end."""
+    ms = result.matcher_stats
+    keys = ("fe_submitted", "fe_admitted", "fe_shed", "fe_forced_drains",
+            "fe_drains", "fe_drain_deadline", "fe_drain_batch_full",
+            "fe_drain_flush", "fe_queue_peak", "fe_wait_s")
+    return {k: ms.get(k, 0) for k in keys}
+
+
 def latency_bound_throughput(scheduler_name: str, platform: Platform,
                              complexity: str, *,
                              hit_target: float = 0.95,
@@ -122,7 +136,10 @@ def latency_bound_throughput(scheduler_name: str, platform: Platform,
                 and finished_frac >= hit_target)
 
     if not ok(lo):
-        return lo
+        # even the lowest probed rate misses the target: the sustainable
+        # rate is below the search bracket, not AT its lower edge —
+        # returning `lo` here would report an unsustainable rate as LBT
+        return 0.0
     for _ in range(iters):
         mid = (lo * hi) ** 0.5          # geometric bisection
         if ok(mid):

@@ -95,8 +95,13 @@ class SchedulerBase:
             if t.status == "running":
                 used.update(t.engines)
         # drop stale reservations, keep live ones out of the free pool
+        # (a reserved task may have finished and left the live table)
         for tid in list(self._reserved):
-            if tasks[tid].status != "ready":
+            try:
+                alive = tasks[tid].status == "ready"
+            except (KeyError, IndexError):
+                alive = False
+            if not alive:
                 del self._reserved[tid]
         for engines in self._reserved.values():
             used.update(engines)
@@ -746,9 +751,13 @@ class LTSScheduler(SchedulerBase):
         """Online re-scheduling on the host CPU: LTS frameworks re-solve a
         layout/partition optimization per decision (paper Fig. 2a — often
         orders of magnitude longer than the execution itself)."""
+        # only tasks the host can actually see (arrived, not finished):
+        # reading pending/unarrived tasks would leak future information
+        # into the cost model and break streaming runs, where unarrived
+        # tasks simply don't exist yet
         n_layers = int(np.mean(
             [len(t.spec.workload.layers) for t in tasks
-             if not t.done] or [32]))
+             if t.status in ("ready", "running")] or [32]))
         work_ops = 2.0e5 * n_layers * sim.platform.engines / 64.0
         t = (work_ops / (sim.platform.cpu_gops * 1e9)
              + 2e-3) * self.variant.sched_scale

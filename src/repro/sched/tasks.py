@@ -8,7 +8,7 @@ setting the paper targets.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import Callable, Iterator, List, Optional, Sequence
 
 import numpy as np
 
@@ -46,6 +46,79 @@ class Scenario:
             t.task_id = i
         self.restarts = sorted(float(r) for r in self.restarts)
 
+    def arrivals_iter(self) -> Iterator[TaskSpec]:
+        """Arrival-ordered task stream — the seam the simulator's
+        streaming event loop consumes. For a materialized scenario this
+        just walks the (already sorted) task list; ``StreamScenario``
+        provides the generator-backed equivalent."""
+        return iter(self.tasks)
+
+
+@dataclasses.dataclass
+class StreamScenario:
+    """A scenario whose tasks are *generated*, not materialized.
+
+    ``arrivals_factory`` returns a fresh arrival-ordered
+    ``Iterator[TaskSpec]`` each time ``arrivals_iter`` is called, so one
+    StreamScenario can be replayed across schedulers exactly like a
+    list-based :class:`Scenario` — but the simulator only ever holds the
+    tasks that are currently live, which is what lets a run replay
+    millions of arrivals at bounded memory. Task ids are assigned by the
+    simulator in arrival order (the factory must yield tasks with
+    nondecreasing ``arrival``)."""
+    name: str
+    horizon: float
+    arrivals_factory: Callable[[], Iterator[TaskSpec]]
+    restarts: List[float] = dataclasses.field(default_factory=list)
+    #: rate × horizon estimate; purely informational (benchmarks report
+    #: it next to the exact admitted count)
+    expected_arrivals: Optional[int] = None
+
+    def __post_init__(self):
+        self.restarts = sorted(float(r) for r in self.restarts)
+
+    def arrivals_iter(self) -> Iterator[TaskSpec]:
+        """Fresh arrival-ordered generator over the task stream."""
+        return self.arrivals_factory()
+
+
+def _poisson_task_stream(complexity: str, *, rate_hz: float,
+                         horizon: float, urgent_frac: float,
+                         deadline_slack: float, urgent_slack: float,
+                         base_exec_estimate: float, burst_size: int,
+                         burst_frac: float, seed: int
+                         ) -> Iterator[TaskSpec]:
+    """Generator behind :func:`make_scenario` / streaming scenarios.
+
+    Draws the RNG in exactly the order the historical list-building loop
+    did (inter-arrival gap, burst coin, then per-task workload/urgency
+    draws), so ``list(_poisson_task_stream(...))`` is byte-identical to
+    the tasks of the materialized scenario with the same knobs — the
+    property ``make_streaming_scenario`` relies on. Yields tasks with
+    nondecreasing ``arrival``; ``task_id`` is left at -1 for the
+    simulator to assign in arrival order."""
+    rng = np.random.default_rng(seed)
+    pool = workload_complexity_class(complexity)
+    bursty = burst_frac > 0.0 and burst_size > 1
+    t = 0.0
+    while True:
+        t += rng.exponential(1.0 / rate_hz)
+        if t >= horizon:
+            return
+        count = 1
+        if bursty and rng.random() < burst_frac:
+            count = int(burst_size)
+        for _ in range(count):
+            wl = pool[rng.integers(len(pool))]
+            urgent = bool(rng.random() < urgent_frac)
+            slack = urgent_slack if urgent else deadline_slack
+            nominal = base_exec_estimate * (wl.total_macs / 1e9 + 0.2)
+            yield TaskSpec(
+                name=wl.name, workload=wl, arrival=float(t),
+                priority=2 if urgent else 1,
+                deadline=float(t + slack * nominal + 1e-3),
+                urgent=urgent)
+
 
 def make_scenario(complexity: str, *, rate_hz: float = 20.0,
                   horizon: float = 2.0, urgent_frac: float = 0.4,
@@ -66,31 +139,49 @@ def make_scenario(complexity: str, *, rate_hz: float = 20.0,
     (no bursts) draw exactly the legacy RNG stream, so existing scenarios
     are byte-identical.
     """
-    rng = np.random.default_rng(seed)
-    pool = workload_complexity_class(complexity)
+    tasks = list(_poisson_task_stream(
+        complexity, rate_hz=rate_hz, horizon=horizon,
+        urgent_frac=urgent_frac, deadline_slack=deadline_slack,
+        urgent_slack=urgent_slack, base_exec_estimate=base_exec_estimate,
+        burst_size=burst_size, burst_frac=burst_frac, seed=seed))
     bursty = burst_frac > 0.0 and burst_size > 1
-    tasks: List[TaskSpec] = []
-    t = 0.0
-    while True:
-        t += rng.exponential(1.0 / rate_hz)
-        if t >= horizon:
-            break
-        count = 1
-        if bursty and rng.random() < burst_frac:
-            count = int(burst_size)
-        for _ in range(count):
-            wl = pool[rng.integers(len(pool))]
-            urgent = bool(rng.random() < urgent_frac)
-            slack = urgent_slack if urgent else deadline_slack
-            nominal = base_exec_estimate * (wl.total_macs / 1e9 + 0.2)
-            tasks.append(TaskSpec(
-                name=wl.name, workload=wl, arrival=float(t),
-                priority=2 if urgent else 1,
-                deadline=float(t + slack * nominal + 1e-3),
-                urgent=urgent))
     name = (f"{complexity}-burst{burst_size}" if bursty
             else f"{complexity}-poisson")
     return Scenario(name=name, tasks=tasks, horizon=horizon)
+
+
+def make_streaming_scenario(complexity: str, *, rate_hz: float = 20.0,
+                            horizon: float = 2.0,
+                            urgent_frac: float = 0.4,
+                            deadline_slack: float = 2.0,
+                            urgent_slack: float = 1.25,
+                            base_exec_estimate: float = 5e-3,
+                            burst_size: int = 1,
+                            burst_frac: float = 0.0,
+                            seed: int = 0) -> StreamScenario:
+    """Streaming twin of :func:`make_scenario`: same knobs, same RNG
+    draws, but tasks are generated on demand instead of materialized, so
+    ``rate_hz * horizon`` can be millions without holding millions of
+    TaskSpecs. ``make_streaming_scenario(...)`` replayed through the
+    simulator is byte-identical to ``make_scenario(...)`` with the same
+    arguments (tested in tests/test_scale.py)."""
+    bursty = burst_frac > 0.0 and burst_size > 1
+    name = (f"{complexity}-burst{burst_size}-stream" if bursty
+            else f"{complexity}-poisson-stream")
+
+    def factory() -> Iterator[TaskSpec]:
+        return _poisson_task_stream(
+            complexity, rate_hz=rate_hz, horizon=horizon,
+            urgent_frac=urgent_frac, deadline_slack=deadline_slack,
+            urgent_slack=urgent_slack,
+            base_exec_estimate=base_exec_estimate,
+            burst_size=burst_size, burst_frac=burst_frac, seed=seed)
+
+    return StreamScenario(
+        name=name, horizon=horizon, arrivals_factory=factory,
+        expected_arrivals=int(rate_hz * horizon *
+                              (1 + (burst_size - 1) * burst_frac
+                               if bursty else 1)))
 
 
 def make_burst_scenario(complexity: str, *, burst_size: int = 4,

@@ -141,3 +141,90 @@ def test_infeasible_problem_reports_not_found():
     res = svc.match(q, g)
     assert not res.found
     assert res.epochs_run == CFG.epochs     # never exits early
+
+
+# -- async front end ----------------------------------------------------
+
+from repro.core.service import AsyncServiceFrontEnd  # noqa: E402
+
+FE_CFG = pso.PSOConfig(num_particles=8, epochs=2, inner_steps=4)
+
+
+def _frontend(max_depth=8, policy="shed", slack=0.1, classes=(1, 2, 4)):
+    svc = MatcherService(FE_CFG, batch_classes=classes)
+    return svc, AsyncServiceFrontEnd(svc, max_depth=max_depth,
+                                     policy=policy,
+                                     slack_threshold_s=slack)
+
+
+def test_frontend_batch_full_trigger():
+    svc, fe = _frontend()
+    probs = [_planted(i, 6, 12) for i in range(4)]
+    rids = [fe.submit(q, g, deadline=100.0, now=0.0) for q, g in probs]
+    # 4th submit fills the largest batch class -> drains without polling
+    assert fe.depth == 0
+    s = svc.stats_dict()
+    assert s["fe_drains"] == 1 and s["fe_drain_batch_full"] == 1
+    assert s["fe_queue_peak"] == 4
+    for rid in rids:
+        assert fe.take_result(rid) is not None
+
+
+def test_frontend_deadline_trigger_and_poll():
+    svc, fe = _frontend(slack=0.1)
+    q, g = _planted(0, 6, 12)
+    rid = fe.submit(q, g, deadline=1.0, now=0.0)
+    with pytest.raises(KeyError):
+        fe.take_result(rid)             # still queued
+    assert fe.next_deadline_check() == pytest.approx(0.9)
+    assert fe.poll(now=0.5) == 0        # slack 0.5 > threshold
+    assert fe.poll(now=0.95) == 1       # slack 0.05 <= threshold
+    s = svc.stats_dict()
+    assert s["fe_drain_deadline"] == 1
+    assert s["fe_wait_s"] == pytest.approx(0.95)
+    assert fe.take_result(rid) is not None
+
+
+def test_frontend_shed_policy_bounds_depth():
+    svc, fe = _frontend(max_depth=2, slack=0.0)
+    q, g = _planted(1, 6, 12)
+    kept = [fe.submit(q, g, deadline=1e9, now=0.0) for _ in range(2)]
+    shed = fe.submit(q, g, deadline=1e9, now=0.0)
+    assert fe.depth == 2
+    s = svc.stats_dict()
+    assert s["fe_shed"] == 1
+    assert s["fe_admitted"] == 2 and s["fe_submitted"] == 3
+    assert fe.take_result(shed) is None         # shed -> recorded None
+    assert fe.flush(now=1.0) == 2
+    assert svc.stats_dict()["fe_drain_flush"] == 1
+    for rid in kept:
+        assert fe.take_result(rid) is not None
+
+
+def test_frontend_block_policy_forces_drain():
+    svc, fe = _frontend(max_depth=2, slack=0.0)
+    fe.policy = "block"
+    q, g = _planted(2, 6, 12)
+    rids = [fe.submit(q, g, deadline=1e9, now=float(i)) for i in range(3)]
+    s = svc.stats_dict()
+    assert s["fe_shed"] == 0
+    assert s["fe_forced_drains"] == 1   # room was made, nothing dropped
+    assert fe.depth == 1                # the post-drain admit
+    fe.flush(now=3.0)
+    for rid in rids:
+        assert fe.take_result(rid) is not None
+
+
+def test_frontend_counters_flow_through_stats_dict():
+    svc, fe = _frontend()
+    q, g = _planted(3, 6, 12)
+    fe.submit(q, g, deadline=50.0, now=0.0)
+    fe.flush(now=1.0)
+    s = svc.stats_dict()
+    for key in ("fe_submitted", "fe_admitted", "fe_shed",
+                "fe_forced_drains", "fe_drains", "fe_drain_deadline",
+                "fe_drain_batch_full", "fe_drain_flush",
+                "fe_queue_peak", "fe_wait_s"):
+        assert key in s
+    assert s["fe_submitted"] == s["fe_admitted"] == 1
+    assert s["fe_drains"] == s["fe_drain_flush"] == 1
