@@ -1,31 +1,35 @@
-"""Fused pre-prune benchmark: kernel latency + cold-start share.
+"""Fused pre-prune benchmark: per-backend kernel latency + cold share.
 
 The global Ullmann+injectivity pre-prune runs before any swarm epoch, so
-it is pure cold-start latency. Two experiments:
+it is pure cold-start latency. Two experiments, each run **per kernel
+backend** (no single ambient-backend number standing in for all of
+them):
 
   1. **Fused vs loose prune.** Batched pre-prune of B planted problems
-     through the backend seam (``ops.prune_fixpoint`` — the fused
-     single-dispatch kernel with the in-kernel convergence flag) against
-     the legacy loose-jnp path (``jax.jit(vmap(ref.prune_mask_fixpoint))``
-     — the pre-PR-4 alternation). On CPU both lower through XLA so the
-     ratio is near 1; on TPU set ``REPRO_KERNEL_BACKEND=pallas`` (or
-     ``--backend pallas``) and the fused path becomes one Pallas launch
-     with the mask resident on-chip for the whole fixpoint loop.
+     through the backend seam (``KernelBackend.prune_fixpoint_batch`` —
+     the fused single-dispatch kernel with the in-kernel convergence
+     flag) against the legacy loose-jnp path
+     (``jax.jit(vmap(ref.prune_mask_fixpoint))`` — the pre-PR-4
+     alternation). The loose baseline is backend-independent and is
+     timed once. On CPU the ``ref`` ratio is near 1 (both lower through
+     XLA) and ``interpret`` is orders slower (it is an emulator, timed
+     for completeness, not a perf claim); the ``pallas`` row only
+     appears on a real TPU.
   2. **Cold-start share.** Median wall time of a cold ``pso.match``
      (prune on) vs the prune launch alone: the fraction of a cold
-     decision the pre-prune accounts for — the number the ROADMAP item
-     targets.
+     decision the pre-prune accounts for.
 
-Also cross-checks the fused kernel against the legacy oracle on every
-measured problem (``parity_ok``) and reports the mean in-kernel sweep
-count (the ``prune_sweeps`` observable the scheduler's analytic charge is
-calibrated with).
+Each backend block also cross-checks the fused kernel against the
+legacy oracle on every measured problem (``parity_ok``) and reports the
+mean in-kernel sweep count. Top-level ``parity_ok`` is the AND over all
+measured backends.
 
 Emits ``BENCH_prune.json`` and CSV rows on stdout.
 
 Usage: PYTHONPATH=src python -m benchmarks.bench_prune
            [--batch B] [--n N] [--m M] [--repeats R]
-           [--backend ref|pallas|interpret] [--smoke] [--out FILE]
+           [--backend ref|pallas|interpret|comma-list|all] [--smoke]
+           [--out FILE]
 """
 from __future__ import annotations
 
@@ -39,8 +43,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import graphs, pso
-from repro.kernels import get_backend, ref, resolve_backend_name
-from repro.kernels import ops
+from repro.kernels import get_backend, ref
+
+#: Backends measured when --backend is omitted / "all": always the jnp
+#: reference and the Pallas interpreter (both run anywhere); the
+#: compiled Pallas backend joins only when a TPU is attached.
+def default_backends() -> list:
+    names = ["ref", "interpret"]
+    if jax.default_backend() == "tpu":
+        names.append("pallas")
+    return names
 
 
 def _planted_problem(seed: int, n: int, m: int):
@@ -71,50 +83,24 @@ def _median_wall(fn, repeats: int) -> float:
     return statistics.median(walls)
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--n", type=int, default=24)
-    ap.add_argument("--m", type=int, default=48)
-    ap.add_argument("--repeats", type=int, default=20)
-    ap.add_argument("--backend", type=str, default=None,
-                    help="kernel backend (default: registry precedence, "
-                         "honouring REPRO_KERNEL_BACKEND)")
-    ap.add_argument("--smoke", action="store_true",
-                    help="tiny sizes for CI")
-    ap.add_argument("--out", type=str, default="BENCH_prune.json")
-    args = ap.parse_args()
-    if args.smoke:
-        args.batch, args.n, args.m, args.repeats = 4, 10, 20, 5
-
-    backend = resolve_backend_name(args.backend)
+def bench_backend(backend: str, Qb, Gb, maskb, legacy_mask,
+                  legacy_s: float, repeats: int, smoke: bool) -> dict:
+    """One backend's fused-prune latency, parity, and cold-start share."""
     bk = get_backend(backend)
-    Qb, Gb, maskb = _stack_problems(args.batch, args.n, args.m)
 
-    # -- 1. fused (backend seam) vs loose-jnp prune latency --
     def fused():
         out, sweeps = bk.prune_fixpoint_batch(maskb, Qb, Gb)
         jax.block_until_ready(out)
         return out, sweeps
 
-    legacy_fn = jax.jit(jax.vmap(ref.prune_mask_fixpoint))
-
-    def legacy():
-        out = legacy_fn(maskb, Qb, Gb)
-        jax.block_until_ready(out)
-        return out
-
-    fused_s = _median_wall(fused, args.repeats)
-    legacy_s = _median_wall(legacy, args.repeats)
+    fused_s = _median_wall(fused, repeats)
     pruned, sweeps = fused()
-    parity_ok = bool(np.array_equal(np.asarray(pruned),
-                                    np.asarray(legacy())))
+    parity_ok = bool(np.array_equal(np.asarray(pruned), legacy_mask))
     avg_sweeps = float(np.asarray(sweeps).mean())
 
-    # -- 2. cold-start share: prune launch vs a whole cold match --
-    cfg = pso.PSOConfig(num_particles=16 if args.smoke else 32,
-                        epochs=1 if args.smoke else 2,
-                        inner_steps=4 if args.smoke else 8,
+    cfg = pso.PSOConfig(num_particles=16 if smoke else 32,
+                        epochs=1 if smoke else 2,
+                        inner_steps=4 if smoke else 8,
                         backend=backend)
     Q0, G0, mask0 = Qb[0], Gb[0], maskb[0]
     key = jax.random.PRNGKey(0)
@@ -127,34 +113,81 @@ def main() -> None:
         out, _ = bk.prune_fixpoint(mask0, Q0, G0)
         jax.block_until_ready(out)
 
-    cold_s = _median_wall(cold_match, args.repeats)
-    prune_one_s = _median_wall(prune_one, args.repeats)
+    cold_s = _median_wall(cold_match, repeats)
+    prune_one_s = _median_wall(prune_one, repeats)
     share = min(max(prune_one_s / max(cold_s, 1e-12), 0.0), 1.0)
-
-    result = {
-        "smoke": bool(args.smoke),
-        "backend": backend,
-        "batch": args.batch,
-        "shape": [args.n, args.m],
-        "repeats": args.repeats,
+    return {
         "parity_ok": parity_ok,
         "avg_prune_sweeps": avg_sweeps,
         "fused_prune_median_s": fused_s,
-        "jnp_prune_median_s": legacy_s,
         "fused_over_jnp_ratio": fused_s / max(legacy_s, 1e-12),
         "cold_match_median_s": cold_s,
         "prune_only_median_s": prune_one_s,
         "prune_share_of_cold": share,
     }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--n", type=int, default=24)
+    ap.add_argument("--m", type=int, default=48)
+    ap.add_argument("--repeats", type=int, default=20)
+    ap.add_argument("--backend", type=str, default=None,
+                    help="backend(s) to measure: a name, a comma list, "
+                         "or 'all' (default: ref+interpret, plus pallas "
+                         "on TPU)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI")
+    ap.add_argument("--out", type=str, default="BENCH_prune.json")
+    args = ap.parse_args()
+    if args.smoke:
+        args.batch, args.n, args.m, args.repeats = 4, 10, 20, 5
+
+    if args.backend in (None, "all"):
+        backends = default_backends()
+    else:
+        backends = [b.strip() for b in args.backend.split(",") if b.strip()]
+
+    Qb, Gb, maskb = _stack_problems(args.batch, args.n, args.m)
+
+    # Loose-jnp baseline: backend-independent, timed once.
+    legacy_fn = jax.jit(jax.vmap(ref.prune_mask_fixpoint))
+
+    def legacy():
+        out = legacy_fn(maskb, Qb, Gb)
+        jax.block_until_ready(out)
+        return out
+
+    legacy_s = _median_wall(legacy, args.repeats)
+    legacy_mask = np.asarray(legacy())
+
+    per_backend = {}
+    for backend in backends:
+        per_backend[backend] = bench_backend(
+            backend, Qb, Gb, maskb, legacy_mask, legacy_s,
+            args.repeats, args.smoke)
+
+    result = {
+        "smoke": bool(args.smoke),
+        "batch": args.batch,
+        "shape": [args.n, args.m],
+        "repeats": args.repeats,
+        "jnp_prune_median_s": legacy_s,
+        "backends": per_backend,
+        "parity_ok": all(b["parity_ok"] for b in per_backend.values()),
+    }
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
 
-    print("metric,value")
-    for k in ("fused_prune_median_s", "jnp_prune_median_s",
-              "fused_over_jnp_ratio", "avg_prune_sweeps",
-              "cold_match_median_s", "prune_share_of_cold"):
-        print(f"{k},{result[k]:.6g}")
-    print(f"parity_ok,{parity_ok}")
+    print("backend,metric,value")
+    print(f"-,jnp_prune_median_s,{legacy_s:.6g}")
+    for backend, blk in per_backend.items():
+        for k in ("fused_prune_median_s", "fused_over_jnp_ratio",
+                  "avg_prune_sweeps", "cold_match_median_s",
+                  "prune_share_of_cold"):
+            print(f"{backend},{k},{blk[k]:.6g}")
+        print(f"{backend},parity_ok,{blk['parity_ok']}")
     print(f"wrote {args.out}")
 
 

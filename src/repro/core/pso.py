@@ -5,9 +5,12 @@ continuously-relaxed mapping S ∈ [0,1]^{n×m} (row-stochastic, masked by the
 global compatibility Mask). Per epoch:
 
   1. InitParticles          — fresh swarm (global bests persist across epochs)
-  2. K inner steps          — fused velocity/position/mask/normalize update
-                              (kernels.ops.pso_update), fitness -‖Q-SGSᵀ‖²,
-                              local & global best tracking
+  2. K inner steps          — ONE fused launch through the backend seam
+                              (KernelBackend.epoch_fused): velocity/position/
+                              mask/normalize update, optional requantize,
+                              fitness -‖Q-SGSᵀ‖², local & global best
+                              tracking — particle state stays kernel-resident
+                              for the whole epoch on the Pallas path
   3. Projection             — greedy argmax assignment M̃ (comparator tree)
   4. UllmannRefine          — candidate set from S ∪ M̃, matrix-form pruning
                               sweeps, re-projection → M̂
@@ -161,18 +164,23 @@ def ullmann_refine_candidates(S, M_proj, Q, G, mask, cfg: PSOConfig):
     return M_hat.astype(jnp.uint8), cand
 
 
-def run_epoch(carry, key, Q, G, mask, cfg: PSOConfig):
-    """One epoch of Algorithm 1 for a local swarm. carry holds the global
-    controller state (S*, f*, S̄) persisted across epochs."""
-    bk = kernel_backend.for_config(cfg)
-    S_star, f_star, S_bar = carry
-    n, m = mask.shape
+def _epoch_start(carry, key, Q, G, mask, cfg: PSOConfig):
+    """Epoch prologue (one problem): key splits, fresh swarm, initial
+    fitness, global-best seeding, and the pre-drawn per-step randoms.
+
+    The key-split topology is exactly the pre-fusion ``run_epoch``'s
+    (3-way with gumbel, else 2-way), and ``r_all[k]`` equals the
+    ``uniform(split(k_steps, K)[k], (N, 3))`` draw the legacy inner
+    scan made at step k — hoisting the draws out of the loop is what
+    lets the fused kernel consume the identical random stream.
+    """
+    S_star, f_star, _ = carry
     if cfg.gumbel_tau > 0:
         k_init, k_steps, k_gum = jax.random.split(key, 3)
     else:
         k_init, k_steps = jax.random.split(key)
+        k_gum = key   # unused: cfg.gumbel_tau == 0 never draws from it
     S, V = init_particles(k_init, cfg.num_particles, mask)
-    S_local = S
     f_local = _fitness(S, Q, G, cfg)
 
     # seed global best from the fresh swarm if better
@@ -181,27 +189,19 @@ def run_epoch(carry, key, Q, G, mask, cfg: PSOConfig):
     S_star = jnp.where(better0, S[best0], S_star)
     f_star = jnp.where(better0, f_local[best0], f_star)
 
-    def inner(state, k):
-        S, V, S_local, f_local, S_star, f_star = state
-        r = jax.random.uniform(k, (cfg.num_particles, 3))
-        S, V = bk.pso_update(S, V, S_local, S_star, S_bar, mask, r,
-                             omega=cfg.omega, c1=cfg.c1, c2=cfg.c2,
-                             c3=cfg.c3, v_max=cfg.v_max)
-        S = _maybe_requantize(S, mask, cfg)
-        f = _fitness(S, Q, G, cfg)
-        improved = f > f_local
-        S_local = jnp.where(improved[:, None, None], S, S_local)
-        f_local = jnp.maximum(f, f_local)
-        b = jnp.argmax(f_local)
-        better = f_local[b] > f_star
-        S_star = jnp.where(better, S_local[b], S_star)
-        f_star = jnp.where(better, f_local[b], f_star)
-        return (S, V, S_local, f_local, S_star, f_star), f_star
+    step_keys = jax.random.split(k_steps, cfg.inner_steps)
+    r_all = jax.vmap(
+        lambda k: jax.random.uniform(k, (cfg.num_particles, 3)))(step_keys)
+    return S, V, f_local, S_star, f_star, r_all, k_gum
 
-    keys = jax.random.split(k_steps, cfg.inner_steps)
-    (S, V, S_local, f_local, S_star, f_star), f_trace = jax.lax.scan(
-        inner, (S, V, S_local, f_local, S_star, f_star), keys)
 
+def _epoch_finish(S, S_star, f_star, f_trace, k_gum, Q, G, mask,
+                  cfg: PSOConfig):
+    """Epoch epilogue (one problem): projections, Ullmann refinement,
+    feasibility, elite consensus — everything downstream of the fused
+    inner loop. Returns the ``(carry, outs)`` pair ``run_epoch`` has
+    always returned."""
+    bk = kernel_backend.for_config(cfg)
     # Projection + Ullmann refinement + feasibility (lines 19-23).
     # Two complementary projections are tried per particle:
     #   (a) adjacency-guided constructive (structured_project) — wins on
@@ -236,6 +236,51 @@ def run_epoch(carry, key, Q, G, mask, cfg: PSOConfig):
     out = dict(mappings=M_hat, feasible=feasible, fitness=f_final,
                f_star_trace=f_trace, S_final=S)
     return (S_star, f_star, S_bar), out
+
+
+def run_epoch(carry, key, Q, G, mask, cfg: PSOConfig):
+    """One epoch of Algorithm 1 for a local swarm. carry holds the global
+    controller state (S*, f*, S̄) persisted across epochs.
+
+    The K-step inner loop runs through the backend seam's fused epoch
+    kernel (``KernelBackend.epoch_fused``): on the Pallas path the
+    particle state stays VMEM-resident for the whole epoch instead of
+    round-tripping HBM every step; the ``ref`` path is the original
+    loose ``lax.scan``, bitwise-equal (``tests/test_backend.py``).
+    """
+    bk = kernel_backend.for_config(cfg)
+    S_bar = carry[2]
+    S, V, f_local, S_star, f_star, r_all, k_gum = _epoch_start(
+        carry, key, Q, G, mask, cfg)
+    S, S_star, f_star, f_trace = bk.epoch_fused(
+        S, V, S, f_local, S_star, f_star, S_bar, mask, Q, G, r_all,
+        omega=cfg.omega, c1=cfg.c1, c2=cfg.c2, c3=cfg.c3,
+        v_max=cfg.v_max, quantized=cfg.quantized)
+    return _epoch_finish(S, S_star, f_star, f_trace, k_gum, Q, G, mask, cfg)
+
+
+def run_epoch_batch(carry, keys, Qb, Gb, maskb, cfg: PSOConfig):
+    """Problem-batched ``run_epoch``: P problems, one fused-epoch launch.
+
+    Equivalent to ``vmap(run_epoch)`` over the leading problem axis —
+    the prologue and epilogue are literally that vmap — but the inner
+    loop goes through ``KernelBackend.epoch_fused_batch`` so the Pallas
+    path grids over problems instead of vmapping a ``pallas_call``.
+    Used by ``match_batch`` and the problem-sharded mesh matcher.
+    """
+    bk = kernel_backend.for_config(cfg)
+    S_bar_b = carry[2]
+    S, V, f_local, S_star, f_star, r_all, k_gum = jax.vmap(
+        lambda c, k, Q, G, mk: _epoch_start(c, k, Q, G, mk, cfg)
+    )(carry, keys, Qb, Gb, maskb)
+    S, S_star, f_star, f_trace = bk.epoch_fused_batch(
+        S, V, S, f_local, S_star, f_star, S_bar_b, maskb, Qb, Gb, r_all,
+        omega=cfg.omega, c1=cfg.c1, c2=cfg.c2, c3=cfg.c3,
+        v_max=cfg.v_max, quantized=cfg.quantized)
+    return jax.vmap(
+        lambda s, st, fs, tr, kg, Q, G, mk: _epoch_finish(
+            s, st, fs, tr, kg, Q, G, mk, cfg)
+    )(S, S_star, f_star, f_trace, k_gum, Qb, Gb, maskb)
 
 
 def default_carry(mask: jax.Array):
@@ -557,11 +602,8 @@ def _match_batch_body(keys: jax.Array, Qb: jax.Array, Gb: jax.Array,
         M_c = jnp.zeros((B, n, m), jnp.uint8)
         carry_ok = jnp.zeros((B,), bool)
 
-    run_epoch_b = jax.vmap(
-        lambda carry, k, Q, G, mk: run_epoch(carry, k, Q, G, mk, cfg))
-
     def run_one(carry, k_b):
-        carry, outs = run_epoch_b(carry, k_b, Qb, Gb, maskb)
+        carry, outs = run_epoch_batch(carry, k_b, Qb, Gb, maskb, cfg)
         del outs["S_final"]  # only needed by the distributed consensus
         return carry, outs
 

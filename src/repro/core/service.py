@@ -131,6 +131,9 @@ class ServiceStats:
     warm_evictions: int = 0
     epochs_run: int = 0              # total epochs actually executed
     epochs_budgeted: int = 0         # cfg.epochs × calls
+    epoch_fused_launches: int = 0    # swarm dispatches whose epochs ran
+                                     # through the fused epoch kernel
+                                     # (KernelBackend.epoch_fused_batch)
     found: int = 0
     batch_launches: int = 0          # swarm (Tier-2) batch executions
     coalesced_requests: int = 0      # requests served in a shared launch
@@ -975,6 +978,7 @@ class MatcherService:
             res.tier = 0
         else:
             self.stats.tier2.launches += 1
+            self.stats.epoch_fused_launches += 1
             self.stats.tier2.checked += 1
             if res.found:
                 self.stats.tier2.hits += 1
@@ -1298,6 +1302,7 @@ class MatcherService:
         self.stats.batch_problems += B
         self.stats.batch_slots += bclass
         self.stats.tier2.launches += 1
+        self.stats.epoch_fused_launches += 1
         self.stats.tier2.checked += B
         self.stats.tier2.wall_s += done - t0
         for j, it in enumerate(items):
@@ -1354,6 +1359,9 @@ class MatcherService:
             "epochs_run": s.epochs_run,
             "epochs_budgeted": s.epochs_budgeted,
             "epochs_saved": s.epochs_saved,
+            "epoch_fused_launches": s.epoch_fused_launches,
+            "epoch_backend": kernel_backend.resolve_backend_name(
+                self.cfg.backend),
             "found": s.found,
             "batch_launches": s.batch_launches,
             "coalesced_requests": s.coalesced_requests,

@@ -62,6 +62,8 @@ KERNEL_NAMES: Tuple[str, ...] = (
     "is_feasible",
     "prune_fixpoint",
     "prune_fixpoint_batch",
+    "epoch_fused",
+    "epoch_fused_batch",
     "quantize_s",
     "dequantize_s",
     "row_normalize_quantized",
@@ -151,6 +153,37 @@ class KernelBackend:
         """Fused pre-prune, batched over problems with per-problem Q/G."""
         return ops.prune_fixpoint(maskb, Qb, Gb, max_iters=max_iters,
                                   backend=self._ops)
+
+    # -- fused epoch loop --------------------------------------------------
+
+    def epoch_fused(self, S, V, S_local, f_local, S_star, f_star, S_bar,
+                    mask, Q, G, r_all, *, omega, c1, c2, c3, v_max,
+                    quantized: bool = False):
+        """The entire K-step epoch inner loop for ONE problem.
+
+        Particle state ``S/V/S_local`` (N, n, m) + ``f_local`` (N,)
+        stays device-resident (VMEM on the fused path) across all K
+        steps; ``r_all`` (K, N, 3) holds the pre-drawn per-step uniform
+        randoms (same values, same order as drawing inside the loop).
+        Returns ``(S_final, S_star, f_star, f_trace (K,))``.
+        """
+        outs = self.epoch_fused_batch(
+            S[None], V[None], S_local[None], f_local[None], S_star[None],
+            f_star[None], S_bar[None], mask[None], Q[None], G[None],
+            r_all[None], omega=omega, c1=c1, c2=c2, c3=c3, v_max=v_max,
+            quantized=quantized)
+        return tuple(x[0] for x in outs)
+
+    def epoch_fused_batch(self, S, V, S_local, f_local, S_star, f_star,
+                          S_bar, mask, Q, G, r_all, *, omega, c1, c2, c3,
+                          v_max, quantized: bool = False):
+        """Fused epoch loop batched over a leading problem axis P (the
+        ``match_batch``/``revalidate_batch`` layout) — one kernel grid
+        over problems, NOT a vmap of the single-problem entry point."""
+        return ops.epoch_fused(S, V, S_local, f_local, S_star, f_star,
+                               S_bar, mask, Q, G, r_all, omega=omega,
+                               c1=c1, c2=c2, c3=c3, v_max=v_max,
+                               quantized=quantized, backend=self._ops)
 
     # -- projection / verification -----------------------------------------
 

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.argmax_project import (greedy_project_pallas,
                                           masked_argmax_pallas)
+from repro.kernels.epoch_fused import (epoch_fused_pallas,
+                                       epoch_inner_reference)
 from repro.kernels.pso_fitness import (edge_fitness_pallas,
                                        edge_fitness_quantized_pallas)
 from repro.kernels.prune_fixpoint import prune_fixpoint_pallas
@@ -169,6 +171,57 @@ def pso_update(S, V, S_local, S_star, S_bar, mask, r,
         omega=omega, c1=c1, c2=c2, c3=c3, v_max=v_max,
         interpret=(backend == "interpret"))
     return s_new[:, :n, :m], v_new[:, :n, :m]
+
+
+# ---------------------------------------------------------------------------
+# Fused epoch loop (PSO update → requantize → fitness → best tracking × K)
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("omega", "c1", "c2", "c3", "v_max", "quantized",
+                     "backend"))
+def epoch_fused(S, V, S_local, f_local, S_star, f_star, S_bar, mask, Q, G,
+                r_all, omega: float, c1: float, c2: float, c3: float,
+                v_max: float, quantized: bool = False,
+                backend: str = "auto"):
+    """The entire K-step epoch inner loop, batched over problems.
+
+    Particle state ``S/V/S_local`` (P, N, n, m) + ``f_local`` (P, N)
+    stay device-resident for the whole loop (VMEM-resident on the fused
+    path); ``S_star``/``S_bar``/``mask`` (P, n, m), ``f_star`` (P,),
+    ``Q`` (P, n, n), ``G`` (P, m, m), ``r_all`` (P, K, N, 3) pre-drawn
+    uniforms. Returns ``(S_final, S_star, f_star, f_trace (P, K))``.
+
+    Padding note: interpret mode runs UNPADDED so the fused body is
+    bitwise-equal to the vmapped ref scan (zero-padding regroups f32
+    reductions by a last ulp); the compiled TPU path MXU-pads n/m —
+    exact for every integer op, allclose on the float-fitness path.
+    Padded mask rows are all-zero, so they normalize to the zero
+    fallback and contribute nothing to fitness.
+    """
+    backend = resolve_backend(backend)
+    if backend == "ref":
+        fn = functools.partial(epoch_inner_reference, omega=omega, c1=c1,
+                               c2=c2, c3=c3, v_max=v_max,
+                               quantized=quantized)
+        return jax.vmap(fn)(S, V, S_local, f_local, S_star, f_star,
+                            S_bar, mask, Q, G, r_all)
+    kw = dict(omega=omega, c1=c1, c2=c2, c3=c3, v_max=v_max,
+              quantized=quantized, interpret=(backend == "interpret"))
+    if backend == "interpret":
+        return epoch_fused_pallas(S, V, S_local, f_local, S_star, f_star,
+                                  S_bar, mask, Q, G, r_all, **kw)
+    P, N, n, m = S.shape
+    np_, mp = _round_up(n), _round_up(m)
+    s_fin, star_fin, fstar_fin, trace = epoch_fused_pallas(
+        _pad_to(S, (np_, mp)), _pad_to(V, (np_, mp)),
+        _pad_to(S_local, (np_, mp)), f_local,
+        _pad_to(S_star, (np_, mp)), f_star, _pad_to(S_bar, (np_, mp)),
+        _pad_to(mask, (np_, mp)), _pad_to(Q, (np_, np_)),
+        _pad_to(G, (mp, mp)), _pad_to(r_all.astype(jnp.float32), (8,)),
+        **kw)
+    return (s_fin[:, :, :n, :m], star_fin[:, :n, :m], fstar_fin, trace)
 
 
 # ---------------------------------------------------------------------------

@@ -49,6 +49,29 @@ class _Problem:
         self.r = jax.random.uniform(k1, (B, 3))
         # a projected assignment for the feasibility kernel
         self.M_hat = ref.greedy_project(self.S[0], self.mask)
+        # fused-epoch inputs: the B axis doubles as the particle axis N,
+        # with 3 pre-drawn inner steps and a seeded local-best fitness
+        self.f_local = -jnp.sum(self.S * self.S, axis=(1, 2))
+        self.r_steps = jnp.stack([self.r * w for w in (0.25, 0.5, 0.75)])
+
+    def epoch_args(self):
+        """(S, V, S_local, f_local, S_star, f_star, S_bar, mask, Q, G,
+        r_all) for one problem — the ``epoch_fused`` signature."""
+        return (self.S, self.V, self.S, self.f_local, self.S[0],
+                jnp.float32(-1e6), self.S.mean(0), self.mask, self.Q,
+                self.G, self.r_steps)
+
+    def epoch_args_batch(self):
+        """Two stacked problems for ``epoch_fused_batch`` (problem 1 is
+        the base instance, problem 2 a column-rolled variant)."""
+        def two(x, axis=None):
+            alt = jnp.roll(x, 1, axis=-1) if axis is not None else x
+            return jnp.stack([x, alt])
+        S2 = two(self.S, -1)
+        return (S2, two(self.V, -1), S2, two(self.f_local),
+                two(self.S[0], -1), jnp.full((2,), -1e6, jnp.float32),
+                two(self.S.mean(0), -1), two(self.mask, -1), two(self.Q),
+                two(self.G), two(self.r_steps))
 
 
 _HYPER = dict(omega=0.7, c1=1.4, c2=1.4, c3=0.6, v_max=0.5)
@@ -73,6 +96,11 @@ KERNEL_CASES = {
     "prune_fixpoint_batch":
         lambda bk, p: bk.prune_fixpoint_batch(p.Mb, p.Q[None].repeat(
             p.Mb.shape[0], 0), p.G[None].repeat(p.Mb.shape[0], 0)),
+    # the fused epoch covers both fitness paths across the sweep: the
+    # single-problem case runs float, the batched case quantized
+    "epoch_fused": lambda bk, p: bk.epoch_fused(*p.epoch_args(), **_HYPER),
+    "epoch_fused_batch": lambda bk, p: bk.epoch_fused_batch(
+        *p.epoch_args_batch(), quantized=True, **_HYPER),
     "quantize_s": lambda bk, p: bk.quantize_s(p.S),
     "dequantize_s": lambda bk, p: bk.dequantize_s(p.S_q),
     "row_normalize_quantized":
@@ -146,6 +174,135 @@ def test_fused_prune_respects_iteration_budget():
             ref.ullmann_refine_step(p.mask, p.Q, p.G))
         np.testing.assert_array_equal(np.asarray(one), np.asarray(want))
         assert int(sweeps) <= 1
+
+
+# ---------------------- fused epoch semantics ------------------------------
+
+def _legacy_run_epoch(carry, key, Q, G, mask, cfg):
+    """The pre-fusion ``run_epoch`` inner loop, verbatim: per-step PRNG
+    splits inside a ``lax.scan`` over ~6 loose kernel dispatches. The
+    fused path must reproduce it bitwise — including the RNG draw order
+    and the ``f_star`` trace."""
+    from repro.kernels import backend as kernel_backend
+    bk = kernel_backend.for_config(cfg)
+    S_star, f_star, S_bar = carry
+    if cfg.gumbel_tau > 0:
+        k_init, k_steps, k_gum = jax.random.split(key, 3)
+    else:
+        k_init, k_steps = jax.random.split(key)
+        k_gum = key
+    S, V = pso.init_particles(k_init, cfg.num_particles, mask)
+    S_local = S
+    f_local = pso._fitness(S, Q, G, cfg)
+    best0 = jnp.argmax(f_local)
+    better0 = f_local[best0] > f_star
+    S_star = jnp.where(better0, S[best0], S_star)
+    f_star = jnp.where(better0, f_local[best0], f_star)
+
+    def inner(state, k):
+        S, V, S_local, f_local, S_star, f_star = state
+        r = jax.random.uniform(k, (cfg.num_particles, 3))
+        S, V = bk.pso_update(S, V, S_local, S_star, S_bar, mask, r,
+                             omega=cfg.omega, c1=cfg.c1, c2=cfg.c2,
+                             c3=cfg.c3, v_max=cfg.v_max)
+        S = pso._maybe_requantize(S, mask, cfg)
+        f = pso._fitness(S, Q, G, cfg)
+        improved = f > f_local
+        S_local = jnp.where(improved[:, None, None], S, S_local)
+        f_local = jnp.maximum(f, f_local)
+        b = jnp.argmax(f_local)
+        better = f_local[b] > f_star
+        S_star = jnp.where(better, S_local[b], S_star)
+        f_star = jnp.where(better, f_local[b], f_star)
+        return (S, V, S_local, f_local, S_star, f_star), f_star
+
+    keys = jax.random.split(k_steps, cfg.inner_steps)
+    (S, *_, S_star, f_star), f_trace = jax.lax.scan(
+        inner, (S, V, S_local, f_local, S_star, f_star), keys)
+    return pso._epoch_finish(S, S_star, f_star, f_trace, k_gum,
+                             Q, G, mask, cfg)
+
+
+def _assert_leaves_bitwise(got, want):
+    got_l = jax.tree_util.tree_leaves(got)
+    want_l = jax.tree_util.tree_leaves(want)
+    assert len(got_l) == len(want_l)
+    for g, w in zip(got_l, want_l):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+@pytest.mark.parametrize("gumbel_tau", [0.0, 0.3])
+@pytest.mark.parametrize("quantized", [False, True])
+def test_run_epoch_bitwise_equals_legacy_scan(quantized, gumbel_tau):
+    """The refactored ``run_epoch`` (epoch prologue → fused-epoch seam →
+    epilogue) on the ``ref`` backend is BITWISE the pre-fusion inline
+    scan: same RNG key consumption, same ``f_star_trace``, same carry."""
+    p = _Problem(21, 1, 10, 18, jnp.uint8)
+    cfg = pso.PSOConfig(num_particles=6, epochs=1, inner_steps=5,
+                        quantized=quantized, gumbel_tau=gumbel_tau,
+                        backend="ref")
+    key = jax.random.PRNGKey(3)
+    carry0 = pso.default_carry(p.mask)
+    got = pso.run_epoch(carry0, key, p.Q, p.G, p.mask, cfg)
+    want = _legacy_run_epoch(carry0, key, p.Q, p.G, p.mask, cfg)
+    _assert_leaves_bitwise(got, want)
+
+
+@pytest.mark.parametrize("mask_dtype", MASK_DTYPES)
+@pytest.mark.parametrize("quantized", [False, True])
+@pytest.mark.parametrize("B,n,m", SHAPES)
+def test_fused_epoch_bitwise_across_backends(B, n, m, quantized,
+                                             mask_dtype):
+    """The fused kernel's own outputs (S_final, S_star, f_star, f_trace)
+    are bitwise-identical between the loose-scan ``ref`` path and the
+    Pallas body in interpret mode — stronger than the allclose bar the
+    float kernels in the generic sweep get."""
+    p = _Problem(hash(("epoch", B, n, m)) % (2 ** 31), B, n, m, mask_dtype)
+    args = p.epoch_args_batch()
+    got = get_backend("interpret").epoch_fused_batch(
+        *args, quantized=quantized, **_HYPER)
+    want = get_backend("ref").epoch_fused_batch(
+        *args, quantized=quantized, **_HYPER)
+    _assert_leaves_bitwise(got, want)
+
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_fused_epoch_f_star_trace_monotone(backend):
+    """Property: the in-epoch global best can only improve — the f_star
+    trace is non-decreasing step over step, starts no lower than the
+    seeded f_star, and ends at the returned f_star (both backends)."""
+    p = _Problem(33, 4, 10, 18, jnp.uint8)
+    args = p.epoch_args()
+    _, _, f_star, f_trace = get_backend(backend).epoch_fused(
+        *args, **_HYPER)
+    trace = np.asarray(f_trace)
+    assert np.all(np.diff(trace) >= 0)
+    assert trace[0] >= float(args[5])     # seeded f_star lower-bounds it
+    assert trace[-1] == np.asarray(f_star)
+
+
+def test_epoch_rng_draws_match_scan_consumption():
+    """Property: hoisting the per-step uniforms out of the scan (the
+    ``r_all`` the fused kernel consumes) yields value-identical draws in
+    the same order as splitting inside the loop — the RNG-consumption
+    contract the bitwise parity above rests on."""
+    k_steps = jax.random.PRNGKey(17)
+    K, N = 6, 5
+    keys = jax.random.split(k_steps, K)
+    hoisted = jax.vmap(lambda k: jax.random.uniform(k, (N, 3)))(keys)
+    _, scanned = jax.lax.scan(
+        lambda c, k: (c, jax.random.uniform(k, (N, 3))), None, keys)
+    np.testing.assert_array_equal(np.asarray(hoisted), np.asarray(scanned))
+    # and _epoch_start feeds exactly these draws to the fused kernel
+    p = _Problem(5, 1, 8, 16, jnp.uint8)
+    cfg = pso.PSOConfig(num_particles=N, inner_steps=K, backend="ref")
+    _, k_steps2 = jax.random.split(jax.random.PRNGKey(17))
+    *_, r_all, _ = pso._epoch_start(
+        pso.default_carry(p.mask), jax.random.PRNGKey(17),
+        p.Q, p.G, p.mask, cfg)
+    want = jax.vmap(lambda k: jax.random.uniform(k, (N, 3)))(
+        jax.random.split(k_steps2, K))
+    np.testing.assert_array_equal(np.asarray(r_all), np.asarray(want))
 
 
 # ---------------------- registry + selection precedence --------------------
