@@ -27,6 +27,15 @@ epoch, achieved FLOP/s at the measured warm latency, and utilization
 against the TPU v5e roof (informational when measured on CPU — it
 locates the wall-clock against a v5e roof, it does not rate the CPU).
 
+Besides the inner loop, the bench times the epoch *tail* (projection,
+Ullmann refinement, feasibility, elite consensus) as one fused launch
+(``kernels/finish_fused.py``) against the split pre-fusion epilogue
+(~8 loose dispatches including a redundant fitness recompute), the
+end-to-end two-launch epoch against the fully split one, counts actual
+seam launches per epoch via an instrumented backend (fused pipeline:
+exactly 2 after the prologue), and embeds the analytic fused-vs-split
+HBM byte model (``benchmarks.roofline.tail_hbm_bytes``).
+
 Emits ``BENCH_epoch.json`` and CSV rows on stdout.
 
 Usage: PYTHONPATH=src python -m benchmarks.bench_epoch
@@ -45,7 +54,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.roofline import epoch_roofline
+from benchmarks.roofline import (epoch_e2e_hbm_bytes, epoch_roofline,
+                                 tail_hbm_bytes)
 from repro.core import graphs, pso
 from repro.kernels import get_backend
 
@@ -90,7 +100,7 @@ def _make_loose_fn(backend: str, quantized: bool, num_particles: int,
     def loose(S, V, S_local, f_local, S_star, f_star, S_bar,
               mask, Q, G, r_all):
         def inner(state, r):
-            S, V, S_local, f_local, S_star, f_star = state
+            S, V, S_local, f_local, S_star, f_star, _ = state
             S, V = bk.pso_update(S, V, S_local, S_star, S_bar, mask, r,
                                  **_HYPER)
             S = pso._maybe_requantize(S, mask, cfg)
@@ -102,13 +112,99 @@ def _make_loose_fn(backend: str, quantized: bool, num_particles: int,
             better = f_local[b] > f_star
             S_star = jnp.where(better, S_local[b], S_star)
             f_star = jnp.where(better, f_local[b], f_star)
-            return (S, V, S_local, f_local, S_star, f_star), f_star
+            return (S, V, S_local, f_local, S_star, f_star, f), f_star
 
-        (S, V, S_local, f_local, S_star, f_star), trace = jax.lax.scan(
-            inner, (S, V, S_local, f_local, S_star, f_star), r_all)
-        return S, S_star, f_star, trace
+        state0 = (S, V, S_local, f_local, S_star, f_star,
+                  f_local.astype(jnp.float32))
+        (S, V, S_local, f_local, S_star, f_star, f_last), trace = \
+            jax.lax.scan(inner, state0, r_all)
+        return S, S_star, f_star, trace, f_last
 
     return loose
+
+
+def _make_split_tail_fn(backend: str, quantized: bool,
+                        num_particles: int):
+    """The pre-fusion epoch epilogue, verbatim: two structured
+    projections, a greedy projection, the Ullmann refinement loop, two
+    feasibility checks, a full fitness RECOMPUTE of the final swarm,
+    and the top_k elite consensus — ~8 loose dispatches per epoch, the
+    pattern the fused tail replaces."""
+    cfg = pso.PSOConfig(num_particles=num_particles, quantized=quantized,
+                        backend=backend)
+    bk = get_backend(backend)
+
+    @jax.jit
+    def split_tail(S, mask, Q, G):
+        M_a = jax.vmap(lambda s: bk.structured_project(s, Q, G, mask))(S)
+        feas_a = jax.vmap(bk.is_feasible,
+                          in_axes=(0, None, None))(M_a, Q, G)
+        M_proj = jax.vmap(lambda s: bk.greedy_project(s, mask))(S)
+        M_b, _ = bk.ullmann_refine_candidates(
+            S, M_proj, Q, G, mask,
+            refine_threshold=cfg.refine_threshold,
+            refine_iters=cfg.refine_iters)
+        feas_b = jax.vmap(bk.is_feasible,
+                          in_axes=(0, None, None))(M_b, Q, G)
+        M_hat = jnp.where(feas_a[:, None, None], M_a, M_b)
+        feasible = feas_a | feas_b
+        f_final = pso._fitness(S, Q, G, cfg)   # the eliminated launch
+        k = max(1, int(round(cfg.elite_frac * num_particles)))
+        S_bar, _, _ = bk.elite_consensus(
+            S, f_final, elite_k=k, consensus_temp=cfg.consensus_temp)
+        return M_hat.astype(jnp.uint8), feasible, S_bar
+
+    return split_tail
+
+
+def _count_epoch_launches(backend: str, quantized: bool, inputs) -> dict:
+    """Seam-call census of one ``run_epoch``: wrap every KernelBackend
+    entry point with a counter and run a real epoch through it. With
+    the fused tail, everything after the prologue's initial fitness is
+    exactly TWO launches (epoch_fused + epoch_finish_batch)."""
+    import collections
+
+    from repro.kernels import backend as kb
+
+    counts = collections.Counter()
+
+    class Counting(kb.KernelBackend):
+        pass
+
+    for name in kb.KERNEL_NAMES:
+        def _wrap(n=name, inner=getattr(kb.KernelBackend, name)):
+            def meth(self, *a, **k):
+                counts[n] += 1
+                return inner(self, *a, **k)
+            meth.__doc__ = inner.__doc__
+            return meth
+        setattr(Counting, name, _wrap())
+
+    S, V, _, f_local, S_star, f_star, S_bar, mask, Q, G, r_all = inputs
+    try:
+        kb.register_backend(Counting("bench-counting",
+                                     ops_backend=backend))
+        cfg = pso.PSOConfig(num_particles=S.shape[0],
+                            inner_steps=r_all.shape[0],
+                            quantized=quantized,
+                            backend="bench-counting")
+        carry0 = (S_star, f_star, S_bar)
+        pso.run_epoch(carry0, jax.random.PRNGKey(0), Q, G, mask, cfg)
+    finally:
+        kb._REGISTRY.pop("bench-counting", None)
+
+    # the single-problem epoch_fused/epoch_finish wrappers delegate to
+    # the batch entry points — count each launch once, not twice
+    total = (sum(counts.values()) - counts["epoch_finish"]
+             - counts["epoch_fused"])
+    prologue = (counts["quantize_s"] + counts["edge_fitness_quantized"]
+                if quantized else counts["edge_fitness"])
+    return {
+        "seam_calls": dict(counts),
+        "launches_total": int(total),
+        "launches_prologue": int(prologue),
+        "launches_epoch": int(total - prologue),
+    }
 
 
 def _time_cold_warm(fn, repeats: int):
@@ -171,6 +267,110 @@ def bench_path(backend: str, quantized: bool, inputs, oracle,
     }
 
 
+_TAIL_STATICS = dict(gumbel_tau=0.0, refine_threshold=0.5,
+                     refine_iters=6, elite_k=8, consensus_temp=25.0)
+
+
+def bench_tail(backend: str, quantized: bool, inputs, tail_oracle,
+               num_particles: int, repeats: int) -> dict:
+    """Fused tail vs split (pre-fusion) epilogue for one backend path.
+
+    The fused tail consumes the threaded last-step fitness; the split
+    tail recomputes it — that recompute launch is part of what fusion
+    eliminates, so it is (deliberately) inside the split timing.
+
+    The tail's correctness GATE is ``parity_allclose_vs_ref_oracle``:
+    the kernel-body program and the ref program can group the elite
+    consensus einsum differently at some shapes (a 1-ulp ``S_bar``
+    difference, input-dependent — the parity-sweep shapes in
+    ``tests/test_backend.py`` stay bitwise), so strict equality is
+    reported as a ``_diagnostic`` leaf that ``bench_report`` skips."""
+    bk = get_backend(backend)
+    cfg = pso.PSOConfig(num_particles=num_particles,
+                        quantized=quantized, backend=backend)
+    S, _, _, _, _, _, _, mask, Q, G, _ = inputs
+    statics = dict(_TAIL_STATICS,
+                   elite_k=max(1, int(round(cfg.elite_frac
+                                            * num_particles))))
+    f_final = pso._fitness(S, Q, G, cfg)
+    fused_jit = jax.jit(lambda s, f, mk, q, g: bk.epoch_finish(
+        s, f, None, mk, q, g, **statics))
+
+    def fused():
+        outs = fused_jit(S, f_final, mask, Q, G)
+        jax.block_until_ready(outs[2])
+        return outs
+
+    split_fn = _make_split_tail_fn(backend, quantized, num_particles)
+
+    def split():
+        outs = split_fn(S, mask, Q, G)
+        jax.block_until_ready(outs[2])
+        return outs
+
+    cold_fused, warm_fused = _time_cold_warm(fused, repeats)
+    cold_split, warm_split = _time_cold_warm(split, repeats)
+    got = _leaves(fused())
+    bitwise = all(np.array_equal(a, b)
+                  for a, b in zip(got, tail_oracle))
+    close = all(np.allclose(a, b, rtol=1e-5, atol=1e-4)
+                for a, b in zip(got, tail_oracle))
+    return {
+        "cold_fused_s": cold_fused,
+        "warm_fused_median_s": warm_fused,
+        "cold_split_s": cold_split,
+        "warm_split_median_s": warm_split,
+        "fused_over_split_ratio": warm_fused / max(warm_split, 1e-12),
+        "bitwise_vs_ref_oracle_diagnostic": bitwise,
+        "parity_allclose_vs_ref_oracle": close,
+    }
+
+
+def bench_e2e(backend: str, quantized: bool, inputs,
+              num_particles: int, repeats: int) -> dict:
+    """End-to-end epoch latency: the two-launch fused pipeline
+    (epoch_fused → epoch_finish) vs the fully split pre-fusion one
+    (K-step loose scan → ~8-dispatch epilogue)."""
+    bk = get_backend(backend)
+    cfg = pso.PSOConfig(num_particles=num_particles,
+                        quantized=quantized, backend=backend)
+    statics = dict(_TAIL_STATICS,
+                   elite_k=max(1, int(round(cfg.elite_frac
+                                            * num_particles))))
+
+    fused_jit = jax.jit(lambda *a: bk.epoch_fused(
+        *a, quantized=quantized, **_HYPER))
+    tail_jit = jax.jit(lambda s, f, mk, q, g: bk.epoch_finish(
+        s, f, None, mk, q, g, **statics))
+    mask, Q, G = inputs[7], inputs[8], inputs[9]
+
+    def fused():
+        S, _, _, _, f_last = fused_jit(*inputs)
+        outs = tail_jit(S, f_last, mask, Q, G)
+        jax.block_until_ready(outs[2])
+        return outs
+
+    loose_fn = _make_loose_fn(backend, quantized, num_particles,
+                              inputs[10].shape[0])
+    split_fn = _make_split_tail_fn(backend, quantized, num_particles)
+
+    def split():
+        S, _, _, _, _ = loose_fn(*inputs)
+        outs = split_fn(S, mask, Q, G)
+        jax.block_until_ready(outs[2])
+        return outs
+
+    cold_fused, warm_fused = _time_cold_warm(fused, repeats)
+    cold_split, warm_split = _time_cold_warm(split, repeats)
+    return {
+        "cold_fused_s": cold_fused,
+        "warm_fused_median_s": warm_fused,
+        "cold_split_s": cold_split,
+        "warm_split_median_s": warm_split,
+        "fused_over_split_ratio": warm_fused / max(warm_split, 1e-12),
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--particles", type=int, default=32)
@@ -197,26 +397,40 @@ def main() -> None:
 
     inputs = _epoch_inputs(7, args.particles, args.n, args.m, args.steps)
 
-    # Bitwise oracle: the loose ref scan (the pre-fusion semantics).
+    # Bitwise oracles: the loose ref scan and the split ref tail (the
+    # pre-fusion semantics of the inner loop and the epilogue).
     oracle = {}
+    tail_oracle = {}
     for quantized in (False, True):
         ref_loose = _make_loose_fn("ref", quantized, args.particles,
                                    args.steps)
         oracle[quantized] = _leaves(ref_loose(*inputs))
+        ref_split = _make_split_tail_fn("ref", quantized, args.particles)
+        tail_oracle[quantized] = _leaves(
+            ref_split(inputs[0], inputs[7], inputs[8], inputs[9]))
 
     per_backend = {}
     roofline = {}
+    launches = {}
     for backend in backends:
         blk = {}
+        tail_blk = {}
+        e2e_blk = {}
         for quantized in (False, True):
             path = "quantized" if quantized else "float"
             blk[path] = bench_path(backend, quantized, inputs,
                                    oracle[quantized], args.particles,
                                    args.steps, args.repeats)
-        per_backend[backend] = blk
+            tail_blk[path] = bench_tail(backend, quantized, inputs,
+                                        tail_oracle[quantized],
+                                        args.particles, args.repeats)
+            e2e_blk[path] = bench_e2e(backend, quantized, inputs,
+                                      args.particles, args.repeats)
+        per_backend[backend] = dict(blk, tail=tail_blk, e2e=e2e_blk)
         roofline[backend] = epoch_roofline(
             args.particles, args.n, args.m, args.steps, quantized=True,
             measured_s=blk["quantized"]["warm_fused_median_s"])
+        launches[backend] = _count_epoch_launches(backend, False, inputs)
 
     strict = [b for b in backends if b in ("ref", "interpret")]
     parity_ok = all(
@@ -224,6 +438,14 @@ def main() -> None:
         for b in strict for p in ("float", "quantized")) and all(
         per_backend[b][p]["parity_allclose_vs_ref_oracle"]
         for b in backends for p in ("float", "quantized"))
+    tail_parity_ok = all(
+        per_backend[b]["tail"][p]["parity_allclose_vs_ref_oracle"]
+        for b in backends for p in ("float", "quantized"))
+
+    tail_hbm = tail_hbm_bytes(args.particles, args.n, args.m,
+                              refine_iters=6)
+    e2e_hbm = epoch_e2e_hbm_bytes(args.particles, args.n, args.m,
+                                  args.steps, refine_iters=6)
 
     result = {
         "smoke": bool(args.smoke),
@@ -233,23 +455,43 @@ def main() -> None:
         "repeats": args.repeats,
         "backends": per_backend,
         "roofline_quantized": roofline,
+        "tail_hbm_bytes": tail_hbm,
+        "e2e_hbm_bytes": e2e_hbm,
+        "launches_per_epoch": launches,
         "parity_ok": parity_ok,
+        "tail_parity_ok": tail_parity_ok,
     }
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
 
     print("backend,path,metric,value")
     for backend, blk in per_backend.items():
-        for path, row in blk.items():
+        for path in ("float", "quantized"):
+            row = blk[path]
             for k in ("cold_fused_s", "warm_fused_median_s",
                       "warm_loose_median_s", "fused_over_loose_ratio"):
                 print(f"{backend},{path},{k},{row[k]:.6g}")
             print(f"{backend},{path},parity_bitwise,"
                   f"{row['parity_bitwise_vs_ref_oracle']}")
+            trow = blk["tail"][path]
+            print(f"{backend},{path},tail_warm_fused_s,"
+                  f"{trow['warm_fused_median_s']:.6g}")
+            print(f"{backend},{path},tail_fused_over_split,"
+                  f"{trow['fused_over_split_ratio']:.6g}")
+            erow = blk["e2e"][path]
+            print(f"{backend},{path},e2e_warm_fused_s,"
+                  f"{erow['warm_fused_median_s']:.6g}")
+            print(f"{backend},{path},e2e_fused_over_split,"
+                  f"{erow['fused_over_split_ratio']:.6g}")
         rf = roofline[backend]
         print(f"{backend},quantized,mxu_utilization_vs_v5e,"
               f"{rf['mxu_utilization_vs_v5e']:.3e}")
+        print(f"{backend},-,launches_epoch,"
+              f"{launches[backend]['launches_epoch']}")
+    print(f"tail_hbm_fused_over_split,"
+          f"{tail_hbm['fused_bytes'] / tail_hbm['split_bytes']:.4g}")
     print(f"parity_ok,{parity_ok}")
+    print(f"tail_parity_ok,{tail_parity_ok}")
     print(f"wrote {args.out}")
 
 

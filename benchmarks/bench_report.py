@@ -1,0 +1,140 @@
+"""Aggregate every ``BENCH_*.json`` into one summary report.
+
+Each benchmark in this suite writes a standalone JSON artifact
+(``BENCH_epoch.json``, ``BENCH_prune.json``, …, with a ``_smoke``
+suffix under CI). Reading six artifacts to answer "did anything
+regress?" does not scale, so this module walks all of them and distills
+the cross-cutting signals into one table and one machine-readable
+``BENCH_report.json``:
+
+* **ratios** — any numeric leaf whose key names a ratio, speedup, or
+  utilization (``fused_over_loose_ratio``, ``coalesced_speedup``,
+  ``mxu_utilization_vs_v5e``, …), reported under its JSON path so the
+  same metric from different benches stays distinguishable;
+* **parity / pass flags** — any boolean leaf whose key indicates a
+  correctness gate (``parity_ok``, ``pass``, ``found_flags_match``, …),
+  AND-folded into a single ``all_flags_ok`` verdict. Leaves whose key
+  contains ``diagnostic`` are informational probes, not gates (e.g.
+  the fused tail's strict-equality check, gated on allclose), and are
+  skipped.
+
+The walk is schema-tolerant on purpose: benches evolve, and the report
+should pick up a new ratio or flag the day it is added rather than
+silently dropping it. CI runs this after the smoke benches and uploads
+``BENCH_report.json`` with the per-bench artifacts; a false flag fails
+the step.
+
+Usage: PYTHONPATH=src python -m benchmarks.bench_report
+           [--dir DIR] [--out FILE] [--fail-on-flag]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Tuple
+
+_RATIO_MARKERS = ("ratio", "speedup", "utilization", "occupancy",
+                  "hit_rate")
+_FLAG_MARKERS = ("parity", "_ok", "pass", "match", "bitwise", "allclose",
+                 "feasible", "equal")
+# Leaves a bench marks as informational, not a gate (e.g. the tail's
+# strict-equality probe, whose gate is the allclose flag): never folded
+# into ``all_flags_ok``.
+_DIAGNOSTIC_MARKER = "diagnostic"
+
+
+def _kind(path: str) -> str:
+    """BENCH_epoch_smoke.json -> 'epoch' (the bench that wrote it)."""
+    stem = os.path.basename(path)[len("BENCH_"):-len(".json")]
+    return stem[:-len("_smoke")] if stem.endswith("_smoke") else stem
+
+
+def _walk(node, prefix: str, ratios: List[Tuple[str, float]],
+          flags: List[Tuple[str, bool]]) -> None:
+    """Collect ratio-like numbers and correctness booleans recursively."""
+    if isinstance(node, dict):
+        for k, v in node.items():
+            _walk(v, f"{prefix}.{k}" if prefix else str(k), ratios, flags)
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            _walk(v, f"{prefix}[{i}]", ratios, flags)
+    elif isinstance(node, bool):
+        key = prefix.rsplit(".", 1)[-1].lower()
+        if _DIAGNOSTIC_MARKER in key:
+            return
+        if any(mark in key for mark in _FLAG_MARKERS):
+            flags.append((prefix, node))
+    elif isinstance(node, (int, float)):
+        key = prefix.rsplit(".", 1)[-1].lower()
+        if any(mark in key for mark in _RATIO_MARKERS):
+            ratios.append((prefix, float(node)))
+
+
+def collect(directory: str = ".") -> Dict[str, dict]:
+    """Parse every BENCH_*.json in ``directory`` into summary blocks."""
+    report: Dict[str, dict] = {}
+    for path in sorted(glob.glob(os.path.join(directory,
+                                              "BENCH_*.json"))):
+        if os.path.basename(path) == "BENCH_report.json":
+            continue
+        with open(path) as f:
+            try:
+                data = json.load(f)
+            except json.JSONDecodeError:
+                report[_kind(path)] = {"file": path, "error": "unparsable"}
+                continue
+        ratios: List[Tuple[str, float]] = []
+        flags: List[Tuple[str, bool]] = []
+        _walk(data, "", ratios, flags)
+        report[_kind(path)] = {
+            "file": path,
+            "smoke": bool(data.get("smoke", False))
+            if isinstance(data, dict) else False,
+            "ratios": dict(ratios),
+            "flags": dict(flags),
+            "flags_ok": all(v for _, v in flags),
+        }
+    return report
+
+
+def main() -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=".",
+                    help="directory holding the BENCH_*.json artifacts")
+    ap.add_argument("--out", default="BENCH_report.json")
+    ap.add_argument("--fail-on-flag", action="store_true",
+                    help="exit nonzero if any correctness flag is false")
+    args = ap.parse_args()
+
+    report = collect(args.dir)
+    all_ok = all(blk.get("flags_ok", True) for blk in report.values())
+    payload = {"benches": report, "all_flags_ok": all_ok}
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+
+    if not report:
+        print(f"no BENCH_*.json artifacts under {args.dir}")
+    for kind, blk in sorted(report.items()):
+        if "error" in blk:
+            print(f"[{kind}] {blk['file']}: {blk['error']}")
+            continue
+        tag = "smoke" if blk["smoke"] else "full"
+        verdict = "OK" if blk["flags_ok"] else "FLAG FAILED"
+        print(f"[{kind}] ({tag}) {len(blk['ratios'])} ratios, "
+              f"{len(blk['flags'])} flags -> {verdict}")
+        for name, val in sorted(blk["ratios"].items()):
+            print(f"    {name} = {val:.4g}")
+        for name, val in sorted(blk["flags"].items()):
+            if not val:
+                print(f"    FAILED: {name}")
+    print(f"all_flags_ok,{all_ok}")
+    print(f"wrote {args.out}")
+    if args.fail_on_flag and not all_ok:
+        raise SystemExit(1)
+    return payload
+
+
+if __name__ == "__main__":
+    main()

@@ -106,6 +106,54 @@ def epoch_hbm_bytes(num_particles: int, n: int, m: int,
     return {"fused_bytes": float(fused), "loose_bytes": float(loose)}
 
 
+def tail_hbm_bytes(num_particles: int, n: int, m: int,
+                   refine_iters: int,
+                   gumbel: bool = False) -> Dict[str, float]:
+    """HBM bytes of one epoch *epilogue*: fused tail vs the split tail.
+
+    The fused tail (``kernels/finish_fused.py``) reads the final swarm
+    once — S (f32), the threaded last-step fitness, the optional Gumbel
+    field, and the uint8 graph operands — and writes only the decisions
+    (M_hat, feasible, S_bar). The split tail is the pre-fusion dispatch
+    sequence (two structured projections, a greedy projection,
+    ``refine_iters`` Ullmann sweeps, two feasibility checks, a full
+    fitness recompute, and the top_k consensus), each launch
+    round-tripping its (N, n, m)-sized operands and intermediates
+    through HBM.
+    """
+    N = num_particles
+    s_f32 = 4 * N * n * m            # the swarm, f32
+    cand = N * n * m                 # uint8 candidate / mapping planes
+    graphs_u8 = n * m + n * n + m * m
+    out = cand + 4 * N + 4 * n * m   # M_hat + feasible + S_bar
+    fused = s_f32 + 4 * N + graphs_u8 + out \
+        + (s_f32 if gumbel else 0)
+    split = (
+        (s_f32 if not gumbel else 2 * s_f32) + graphs_u8 + cand  # proj a
+        + cand + graphs_u8 + 4 * N                 # feasibility a
+        + s_f32 + n * m + cand                     # greedy projection
+        + refine_iters * (2 * cand + graphs_u8)    # Ullmann sweeps
+        + s_f32 + 2 * cand + graphs_u8             # re-projection b
+        + cand + graphs_u8 + 4 * N                 # feasibility b
+        + s_f32 + graphs_u8 + 4 * N                # fitness RECOMPUTE
+        + s_f32 + 4 * N + 4 * n * m)               # top_k consensus
+    return {"fused_bytes": float(fused), "split_bytes": float(split)}
+
+
+def epoch_e2e_hbm_bytes(num_particles: int, n: int, m: int,
+                        inner_steps: int, refine_iters: int,
+                        gumbel: bool = False) -> Dict[str, float]:
+    """End-to-end HBM bytes of one epoch (inner loop + epilogue), for
+    the two-launch fused pipeline vs the fully split pre-fusion one."""
+    loop = epoch_hbm_bytes(num_particles, n, m, inner_steps)
+    tail = tail_hbm_bytes(num_particles, n, m, refine_iters,
+                          gumbel=gumbel)
+    return {
+        "fused_bytes": loop["fused_bytes"] + tail["fused_bytes"],
+        "split_bytes": loop["loose_bytes"] + tail["split_bytes"],
+    }
+
+
 def epoch_roofline(num_particles: int, n: int, m: int, inner_steps: int,
                    quantized: bool,
                    measured_s: Optional[float] = None) -> dict:

@@ -123,45 +123,34 @@ def _maybe_requantize(S, mask, cfg: PSOConfig):
     return bk.dequantize_s(Sq)
 
 
+def elite_k_for(cfg: PSOConfig) -> int:
+    """Static elite count k = max(1, round(elite_frac · N)) (line 24)."""
+    return max(1, int(round(cfg.elite_frac * cfg.num_particles)))
+
+
 def elite_consensus(S_all, f_all, cfg: PSOConfig):
     """S̄: softmax-weighted average of the elite fraction (paper line 24).
 
     Also returns (weighted_sum, weight_total) so the distributed matcher can
-    psum the parts across devices before dividing.
+    psum the parts across devices before dividing. Thin wrapper over the
+    backend seam (``KernelBackend.elite_consensus``) — the fused epoch
+    tail computes the same reduction in-kernel.
     """
-    num = S_all.shape[0]
-    k = max(1, int(round(cfg.elite_frac * num)))
-    f_top, idx = jax.lax.top_k(f_all, k)
-    # normalize: fitnesses are large negatives; softmax over (f - max)/T
-    f_norm = (f_top - f_top[0]) / cfg.consensus_temp
-    w = jax.nn.softmax(f_norm)
-    S_top = S_all[idx]
-    weighted = jnp.einsum("k,knm->nm", w, S_top)
-    return weighted, jnp.sum(w), w
+    bk = kernel_backend.for_config(cfg)
+    k = max(1, int(round(cfg.elite_frac * S_all.shape[0])))
+    return bk.elite_consensus(S_all, f_all, elite_k=k,
+                              consensus_temp=cfg.consensus_temp)
 
 
 def ullmann_refine_candidates(S, M_proj, Q, G, mask, cfg: PSOConfig):
     """Paper line 20: refine the particle's candidate structure with Ullmann
-    pruning sweeps, then re-project. Batched over particles."""
+    pruning sweeps, then re-project. Batched over particles. Thin wrapper
+    over the backend seam (``KernelBackend.ullmann_refine_candidates``) —
+    the fused epoch tail runs the same refinement in-kernel."""
     bk = kernel_backend.for_config(cfg)
-    rowmax = S.max(axis=-1, keepdims=True)
-    cand = ((S >= cfg.refine_threshold * rowmax) | (M_proj > 0))
-    cand = (cand & (mask[None] > 0)).astype(jnp.uint8)
-
-    def sweep(_, c):
-        return bk.ullmann_refine_step(c, Q, G)
-
-    cand = jax.lax.fori_loop(0, cfg.refine_iters, sweep, cand)
-    # Re-project S restricted to the surviving candidates (adjacency-
-    # guided). Rows whose candidates were fully pruned fall back to the
-    # original projection row (it will simply fail feasibility if truly
-    # impossible).
-    S_restricted = S * cand.astype(S.dtype)
-    M_hat = jax.vmap(lambda s, c: bk.structured_project(s, Q, G, c))(
-        S_restricted, cand)
-    empty_rows = cand.sum(-1, keepdims=True) == 0
-    M_hat = jnp.where(empty_rows, M_proj, M_hat)
-    return M_hat.astype(jnp.uint8), cand
+    return bk.ullmann_refine_candidates(
+        S, M_proj, Q, G, mask, refine_threshold=cfg.refine_threshold,
+        refine_iters=cfg.refine_iters)
 
 
 def _epoch_start(carry, key, Q, G, mask, cfg: PSOConfig):
@@ -195,43 +184,45 @@ def _epoch_start(carry, key, Q, G, mask, cfg: PSOConfig):
     return S, V, f_local, S_star, f_star, r_all, k_gum
 
 
-def _epoch_finish(S, S_star, f_star, f_trace, k_gum, Q, G, mask,
+def _epoch_finish(S, S_star, f_star, f_trace, f_final, k_gum, Q, G, mask,
                   cfg: PSOConfig):
     """Epoch epilogue (one problem): projections, Ullmann refinement,
     feasibility, elite consensus — everything downstream of the fused
-    inner loop. Returns the ``(carry, outs)`` pair ``run_epoch`` has
-    always returned."""
+    inner loop, as ONE ``KernelBackend.epoch_finish`` launch. Returns
+    the ``(carry, outs)`` pair ``run_epoch`` has always returned.
+
+    ``f_final`` is the fused epoch kernel's last-step per-particle
+    fitness (already in ``_fitness``'s scaled float units on both the
+    float and quantized paths) threaded through instead of recomputed —
+    the pre-fusion epilogue paid a full ``_fitness(S)`` launch for
+    values the inner loop had just produced, bitwise-identically
+    (``tests/test_backend.py::test_run_epoch_bitwise_equals_legacy_scan``).
+
+    Two complementary projections are tried per particle:
+      (a) adjacency-guided constructive (structured_project) — wins on
+          sparse engine meshes where structure-blind argmax almost never
+          lands on a consistent sub-DAG; optionally Gumbel-perturbed
+          (τ-scaled noise on log S makes the constructive argmax a
+          per-row softmax sample, so consensus-collapsed particles
+          explore distinct assignments; τ=0 is exact deterministic
+          projection);
+      (b) plain greedy argmax + Ullmann candidate refinement — wins on
+          dense targets where the constructive greedy can dead-end.
+    """
     bk = kernel_backend.for_config(cfg)
-    # Projection + Ullmann refinement + feasibility (lines 19-23).
-    # Two complementary projections are tried per particle:
-    #   (a) adjacency-guided constructive (structured_project) — wins on
-    #       sparse engine meshes where structure-blind argmax almost never
-    #       lands on a consistent sub-DAG;
-    #   (b) plain greedy argmax + Ullmann candidate refinement — wins on
-    #       dense targets where the constructive greedy can dead-end.
-    # Optional per-particle Gumbel perturbation (ROADMAP diversity fix):
-    # deterministic projection maps every consensus-collapsed particle to
-    # the same assignment; adding τ-scaled Gumbel noise to log S makes the
-    # constructive argmax a sample from softmax(log S / τ') per row, so
-    # identical particles explore distinct assignments. τ=0 is exact
-    # deterministic projection (scores are a monotone transform of S).
+    # The Gumbel field is the one random input of the epilogue; drawing
+    # it host-side (same key, same shape, same dtype as the pre-fusion
+    # code) keeps the kernel deterministic AND the RNG stream bitwise
+    # identical to the legacy epilogue.
     if cfg.gumbel_tau > 0:
         gum = jax.random.gumbel(k_gum, S.shape, dtype=jnp.float32)
-        S_proj_a = jnp.log(jnp.clip(S.astype(jnp.float32), 1e-9, None)) \
-            + cfg.gumbel_tau * gum
     else:
-        S_proj_a = S
-    M_a = jax.vmap(lambda s: bk.structured_project(s, Q, G, mask))(S_proj_a)
-    feas_a = jax.vmap(bk.is_feasible, in_axes=(0, None, None))(M_a, Q, G)
-    M_proj = jax.vmap(lambda s: bk.greedy_project(s, mask))(S)
-    M_b, _ = ullmann_refine_candidates(S, M_proj, Q, G, mask, cfg)
-    feas_b = jax.vmap(bk.is_feasible, in_axes=(0, None, None))(M_b, Q, G)
-    M_hat = jnp.where(feas_a[:, None, None], M_a, M_b)
-    feasible = feas_a | feas_b
-    f_final = _fitness(S, Q, G, cfg)
-
-    # EliteConsensus (line 24) → next epoch's S̄
-    S_bar, _, _ = elite_consensus(S, f_final, cfg)
+        gum = None
+    M_hat, feasible, S_bar = bk.epoch_finish(
+        S, f_final, gum, mask, Q, G, gumbel_tau=cfg.gumbel_tau,
+        refine_threshold=cfg.refine_threshold,
+        refine_iters=cfg.refine_iters, elite_k=elite_k_for(cfg),
+        consensus_temp=cfg.consensus_temp)
 
     out = dict(mappings=M_hat, feasible=feasible, fitness=f_final,
                f_star_trace=f_trace, S_final=S)
@@ -242,30 +233,35 @@ def run_epoch(carry, key, Q, G, mask, cfg: PSOConfig):
     """One epoch of Algorithm 1 for a local swarm. carry holds the global
     controller state (S*, f*, S̄) persisted across epochs.
 
-    The K-step inner loop runs through the backend seam's fused epoch
-    kernel (``KernelBackend.epoch_fused``): on the Pallas path the
-    particle state stays VMEM-resident for the whole epoch instead of
-    round-tripping HBM every step; the ``ref`` path is the original
-    loose ``lax.scan``, bitwise-equal (``tests/test_backend.py``).
+    The whole epoch is TWO kernel launches with no host-visible
+    intermediates: the K-step inner loop through the seam's fused epoch
+    kernel (``KernelBackend.epoch_fused`` — particle state VMEM-resident
+    for the whole epoch on the Pallas path), then the entire epilogue
+    (projections, Ullmann refinement, feasibility, elite consensus)
+    through the fused tail (``KernelBackend.epoch_finish``). The ``ref``
+    path is the original loose code, bitwise-equal
+    (``tests/test_backend.py``).
     """
     bk = kernel_backend.for_config(cfg)
     S_bar = carry[2]
     S, V, f_local, S_star, f_star, r_all, k_gum = _epoch_start(
         carry, key, Q, G, mask, cfg)
-    S, S_star, f_star, f_trace = bk.epoch_fused(
+    S, S_star, f_star, f_trace, f_last = bk.epoch_fused(
         S, V, S, f_local, S_star, f_star, S_bar, mask, Q, G, r_all,
         omega=cfg.omega, c1=cfg.c1, c2=cfg.c2, c3=cfg.c3,
         v_max=cfg.v_max, quantized=cfg.quantized)
-    return _epoch_finish(S, S_star, f_star, f_trace, k_gum, Q, G, mask, cfg)
+    return _epoch_finish(S, S_star, f_star, f_trace, f_last, k_gum, Q, G,
+                         mask, cfg)
 
 
 def run_epoch_batch(carry, keys, Qb, Gb, maskb, cfg: PSOConfig):
     """Problem-batched ``run_epoch``: P problems, one fused-epoch launch.
 
     Equivalent to ``vmap(run_epoch)`` over the leading problem axis —
-    the prologue and epilogue are literally that vmap — but the inner
-    loop goes through ``KernelBackend.epoch_fused_batch`` so the Pallas
-    path grids over problems instead of vmapping a ``pallas_call``.
+    the prologue is literally that vmap — but both the inner loop
+    (``KernelBackend.epoch_fused_batch``) and the entire epilogue
+    (``KernelBackend.epoch_finish_batch``) go through problem-gridded
+    kernels, so one epoch over P problems is exactly two launches.
     Used by ``match_batch`` and the problem-sharded mesh matcher.
     """
     bk = kernel_backend.for_config(cfg)
@@ -273,14 +269,27 @@ def run_epoch_batch(carry, keys, Qb, Gb, maskb, cfg: PSOConfig):
     S, V, f_local, S_star, f_star, r_all, k_gum = jax.vmap(
         lambda c, k, Q, G, mk: _epoch_start(c, k, Q, G, mk, cfg)
     )(carry, keys, Qb, Gb, maskb)
-    S, S_star, f_star, f_trace = bk.epoch_fused_batch(
+    S, S_star, f_star, f_trace, f_last = bk.epoch_fused_batch(
         S, V, S, f_local, S_star, f_star, S_bar_b, maskb, Qb, Gb, r_all,
         omega=cfg.omega, c1=cfg.c1, c2=cfg.c2, c3=cfg.c3,
         v_max=cfg.v_max, quantized=cfg.quantized)
-    return jax.vmap(
-        lambda s, st, fs, tr, kg, Q, G, mk: _epoch_finish(
-            s, st, fs, tr, kg, Q, G, mk, cfg)
-    )(S, S_star, f_star, f_trace, k_gum, Qb, Gb, maskb)
+    f_final = f_last
+    # Per-problem Gumbel fields, drawn from the same per-problem keys the
+    # single-problem path uses so batch ≡ vmap(run_epoch) stays bitwise.
+    if cfg.gumbel_tau > 0:
+        gum = jax.vmap(
+            lambda k, s: jax.random.gumbel(k, s.shape, dtype=jnp.float32)
+        )(k_gum, S)
+    else:
+        gum = None
+    M_hat, feasible, S_bar = bk.epoch_finish_batch(
+        S, f_final, gum, maskb, Qb, Gb, gumbel_tau=cfg.gumbel_tau,
+        refine_threshold=cfg.refine_threshold,
+        refine_iters=cfg.refine_iters, elite_k=elite_k_for(cfg),
+        consensus_temp=cfg.consensus_temp)
+    out = dict(mappings=M_hat, feasible=feasible, fitness=f_final,
+               f_star_trace=f_trace, S_final=S)
+    return (S_star, f_star, S_bar), out
 
 
 def default_carry(mask: jax.Array):

@@ -134,6 +134,11 @@ class ServiceStats:
     epoch_fused_launches: int = 0    # swarm dispatches whose epochs ran
                                      # through the fused epoch kernel
                                      # (KernelBackend.epoch_fused_batch)
+    epoch_finish_launches: int = 0   # swarm dispatches whose epoch
+                                     # epilogue ran through the fused
+                                     # tail (KernelBackend.epoch_finish)
+    epoch_finish_problems: int = 0   # problems those epilogues covered
+                                     # (batch dispatches count B each)
     found: int = 0
     batch_launches: int = 0          # swarm (Tier-2) batch executions
     coalesced_requests: int = 0      # requests served in a shared launch
@@ -979,6 +984,8 @@ class MatcherService:
         else:
             self.stats.tier2.launches += 1
             self.stats.epoch_fused_launches += 1
+            self.stats.epoch_finish_launches += 1
+            self.stats.epoch_finish_problems += 1
             self.stats.tier2.checked += 1
             if res.found:
                 self.stats.tier2.hits += 1
@@ -1303,6 +1310,8 @@ class MatcherService:
         self.stats.batch_slots += bclass
         self.stats.tier2.launches += 1
         self.stats.epoch_fused_launches += 1
+        self.stats.epoch_finish_launches += 1
+        self.stats.epoch_finish_problems += B
         self.stats.tier2.checked += B
         self.stats.tier2.wall_s += done - t0
         for j, it in enumerate(items):
@@ -1360,6 +1369,8 @@ class MatcherService:
             "epochs_budgeted": s.epochs_budgeted,
             "epochs_saved": s.epochs_saved,
             "epoch_fused_launches": s.epoch_fused_launches,
+            "epoch_finish_launches": s.epoch_finish_launches,
+            "epoch_finish_problems": s.epoch_finish_problems,
             "epoch_backend": kernel_backend.resolve_backend_name(
                 self.cfg.backend),
             "found": s.found,

@@ -64,6 +64,8 @@ KERNEL_NAMES: Tuple[str, ...] = (
     "prune_fixpoint_batch",
     "epoch_fused",
     "epoch_fused_batch",
+    "epoch_finish",
+    "epoch_finish_batch",
     "quantize_s",
     "dequantize_s",
     "row_normalize_quantized",
@@ -165,7 +167,10 @@ class KernelBackend:
         stays device-resident (VMEM on the fused path) across all K
         steps; ``r_all`` (K, N, 3) holds the pre-drawn per-step uniform
         randoms (same values, same order as drawing inside the loop).
-        Returns ``(S_final, S_star, f_star, f_trace (K,))``.
+        Returns ``(S_final, S_star, f_star, f_trace (K,), f_last (N,))``
+        — ``f_last`` is the last inner step's per-particle fitness,
+        threaded into the fused tail so the epilogue never recomputes
+        it.
         """
         outs = self.epoch_fused_batch(
             S[None], V[None], S_local[None], f_local[None], S_star[None],
@@ -184,6 +189,81 @@ class KernelBackend:
                                S_bar, mask, Q, G, r_all, omega=omega,
                                c1=c1, c2=c2, c3=c3, v_max=v_max,
                                quantized=quantized, backend=self._ops)
+
+    # -- fused epoch tail --------------------------------------------------
+
+    def epoch_finish(self, S, f_final, gum, mask, Q, G, *, gumbel_tau,
+                     refine_threshold, refine_iters, elite_k,
+                     consensus_temp):
+        """The entire epoch epilogue for ONE problem, fused.
+
+        (Gumbel-perturbed) structured projection, greedy projection +
+        Ullmann candidate refinement, per-particle feasibility and the
+        elite consensus in one body. ``S``: (N, n, m) final swarm;
+        ``f_final``: (N,) the fused epoch kernel's last-step fitness
+        (threaded through instead of recomputed); ``gum``: (N, n, m)
+        pre-drawn Gumbel noise or ``None`` when ``gumbel_tau == 0``.
+        Returns ``(M_hat (N, n, m) uint8, feasible (N,) bool,
+        S_bar (n, m) f32)``.
+        """
+        outs = self.epoch_finish_batch(
+            S[None], f_final[None], None if gum is None else gum[None],
+            mask[None], Q[None], G[None], gumbel_tau=gumbel_tau,
+            refine_threshold=refine_threshold, refine_iters=refine_iters,
+            elite_k=elite_k, consensus_temp=consensus_temp)
+        return tuple(x[0] for x in outs)
+
+    def epoch_finish_batch(self, S, f_final, gum, mask, Q, G, *,
+                           gumbel_tau, refine_threshold, refine_iters,
+                           elite_k, consensus_temp):
+        """Fused epoch tail batched over a leading problem axis P — one
+        kernel grid over problems, so an epoch of ``run_epoch_batch``
+        is exactly two launches (``epoch_fused_batch`` → this)."""
+        return ops.epoch_finish(S, f_final, gum, mask, Q, G,
+                                gumbel_tau=gumbel_tau,
+                                refine_threshold=refine_threshold,
+                                refine_iters=refine_iters,
+                                elite_k=elite_k,
+                                consensus_temp=consensus_temp,
+                                backend=self._ops)
+
+    def ullmann_refine_candidates(self, S, M_proj, Q, G, mask, *,
+                                  refine_threshold, refine_iters):
+        """Candidate refinement of paper line 20 for ONE problem,
+        batched over particles: threshold ∪ projection candidate set,
+        ``refine_iters`` sweeps through :meth:`ullmann_refine_step`,
+        structured re-projection with an empty-row fallback to
+        ``M_proj``. Returns ``(M_hat uint8, cand uint8)``. Composed
+        from this suite's own sweep/projection kernels so a subclass
+        overriding those automatically refines through them.
+        """
+        import jax
+        import jax.numpy as jnp
+        rowmax = S.max(axis=-1, keepdims=True)
+        cand = ((S >= refine_threshold * rowmax) | (M_proj > 0))
+        cand = (cand & (mask[None] > 0)).astype(jnp.uint8)
+
+        def sweep(_, c):
+            return self.ullmann_refine_step(c, Q, G)
+
+        cand = jax.lax.fori_loop(0, refine_iters, sweep, cand)
+        S_restricted = S * cand.astype(S.dtype)
+        M_hat = jax.vmap(lambda s, c: self.structured_project(s, Q, G, c))(
+            S_restricted, cand)
+        empty_rows = cand.sum(-1, keepdims=True) == 0
+        M_hat = jnp.where(empty_rows, M_proj, M_hat)
+        return M_hat.astype(jnp.uint8), cand
+
+    def elite_consensus(self, S_all, f_all, *, elite_k, consensus_temp):
+        """S̄: softmax-weighted average of the ``elite_k`` fittest
+        particles (paper line 24). Returns ``(weighted, weight_total,
+        w)`` so the distributed matcher can psum the parts across
+        devices before dividing. The fused tail computes the same
+        reduction in-kernel; this standalone entry point serves the
+        mesh builders and any caller outside the epoch hot path."""
+        from repro.kernels.finish_fused import elite_consensus_reference
+        return elite_consensus_reference(S_all, f_all, elite_k=elite_k,
+                                         consensus_temp=consensus_temp)
 
     # -- projection / verification -----------------------------------------
 

@@ -79,7 +79,12 @@ def epoch_inner_reference(S, V, S_local, f_local, S_star, f_star, S_bar,
     Composed from the same ``ref.*`` building blocks the dispatch
     layer's ``ref`` backend uses, so it is the bitwise ground truth the
     Pallas body is tested against. Returns
-    ``(S_final, S_star, f_star, f_trace)``.
+    ``(S_final, S_star, f_star, f_trace, f_last)`` where ``f_last`` is
+    the per-particle fitness of ``S_final`` — the value the epoch
+    epilogue previously recomputed from scratch. It initializes from
+    the ``f_local`` input (which equals ``fitness(S)`` for the real
+    caller, ``_epoch_start``), so a degenerate K = 0 epoch still
+    returns the fitness of the state it hands the epilogue.
     """
     upd = functools.partial(ref.pso_update, omega=omega, c1=c1, c2=c2,
                             c3=c3, v_max=v_max)
@@ -93,7 +98,7 @@ def epoch_inner_reference(S, V, S_local, f_local, S_star, f_star, S_bar,
         return jax.vmap(ref.edge_fitness, in_axes=(0, None, None))(S, Q, G)
 
     def inner(state, r):
-        S, V, S_local, f_local, S_star, f_star = state
+        S, V, S_local, f_local, S_star, f_star, _ = state
         S, V = jax.vmap(upd, in_axes=(0, 0, 0, None, None, None, 0))(
             S, V, S_local, S_star, S_bar, mask, r)
         if quantized:
@@ -108,16 +113,18 @@ def epoch_inner_reference(S, V, S_local, f_local, S_star, f_star, S_bar,
         better = f_local[b] > f_star
         S_star = jnp.where(better, S_local[b], S_star)
         f_star = jnp.where(better, f_local[b], f_star)
-        return (S, V, S_local, f_local, S_star, f_star), f_star
+        return (S, V, S_local, f_local, S_star, f_star, f), f_star
 
-    (S, V, S_local, f_local, S_star, f_star), f_trace = jax.lax.scan(
-        inner, (S, V, S_local, f_local, S_star, f_star), r_all)
-    return S, S_star, f_star, f_trace
+    f_last0 = f_local.astype(jnp.float32)
+    (S, V, S_local, f_local, S_star, f_star, f_last), f_trace = jax.lax.scan(
+        inner, (S, V, S_local, f_local, S_star, f_star, f_last0), r_all)
+    return S, S_star, f_star, f_trace, f_last
 
 
 def _epoch_kernel(r_ref, s_ref, v_ref, sl_ref, fl_ref, star_ref, fstar_ref,
                   sbar_ref, mask_ref, q_ref, g_ref,
-                  s_out_ref, star_out_ref, fstar_out_ref, trace_ref, *,
+                  s_out_ref, star_out_ref, fstar_out_ref, trace_ref,
+                  flast_out_ref, *,
                   inner_steps: int, omega: float, c1: float, c2: float,
                   c3: float, v_max: float, quantized: bool):
     r_all = r_ref[0]                               # (K, N, r_pad) f32
@@ -160,7 +167,7 @@ def _epoch_kernel(r_ref, s_ref, v_ref, sl_ref, fl_ref, star_ref, fstar_ref,
         return -jnp.sum(resid * resid, axis=(1, 2))
 
     def step(i, state):
-        S, V, S_local, f_local, S_star, f_star = state
+        S, V, S_local, f_local, S_star, f_star, _ = state
         r = jax.lax.dynamic_index_in_dim(r_all, i, 0, keepdims=False)
         r0 = r[:, 0][:, None, None]
         r1 = r[:, 1][:, None, None]
@@ -201,16 +208,21 @@ def _epoch_kernel(r_ref, s_ref, v_ref, sl_ref, fl_ref, star_ref, fstar_ref,
         S_star = jnp.where(better, S_best, S_star)
         f_star = jnp.where(better, f_best, f_star)
         trace_ref[0, i] = f_star
-        return S, V, S_local, f_local, S_star, f_star
+        return S, V, S_local, f_local, S_star, f_star, f
 
+    # f_last carries the fitness of the CURRENT S (the value the epoch
+    # epilogue consumes instead of recomputing); it initializes from the
+    # f_local input, which is fitness(S) for the real caller.
     state0 = (s_ref[0].astype(jnp.float32), v_ref[0].astype(jnp.float32),
               sl_ref[0].astype(jnp.float32), fl_ref[0].astype(jnp.float32),
-              star_ref[0].astype(jnp.float32), fstar_ref[0, 0])
-    S, V, S_local, f_local, S_star, f_star = jax.lax.fori_loop(
+              star_ref[0].astype(jnp.float32), fstar_ref[0, 0],
+              fl_ref[0].astype(jnp.float32))
+    S, V, S_local, f_local, S_star, f_star, f_last = jax.lax.fori_loop(
         0, inner_steps, step, state0)
     s_out_ref[0] = S
     star_out_ref[0] = S_star
     fstar_out_ref[0, 0] = f_star
+    flast_out_ref[0] = f_last
 
 
 @functools.partial(
@@ -227,14 +239,16 @@ def epoch_fused_pallas(S, V, S_local, f_local, S_star, f_star, S_bar,
     (P, m, m); ``r_all``: (P, K, N, r) pre-drawn step randoms (only
     ``r[..., :3]`` is consumed — the ops layer lane-pads the rest).
     Returns ``(S_final (P, N, n, m), S_star (P, n, m), f_star (P,),
-    f_trace (P, K))``; the single-problem case is just P = 1.
+    f_trace (P, K), f_last (P, N))`` — ``f_last`` is the fitness of
+    ``S_final``, threaded out so the epoch epilogue never recomputes
+    it; the single-problem case is just P = 1.
     """
     P, N, n, m = S.shape
     K, r_dim = r_all.shape[1], r_all.shape[3]
     kernel = functools.partial(
         _epoch_kernel, inner_steps=K, omega=omega, c1=c1, c2=c2, c3=c3,
         v_max=v_max, quantized=quantized)
-    s_fin, star_fin, fstar_fin, trace = pl.pallas_call(
+    s_fin, star_fin, fstar_fin, trace, f_last = pl.pallas_call(
         kernel,
         grid=(P,),
         in_specs=[
@@ -258,16 +272,18 @@ def epoch_fused_pallas(S, V, S_local, f_local, S_star, f_star, S_bar,
                          memory_space=pltpu.SMEM),
             pl.BlockSpec((1, K), lambda p: (p, 0),
                          memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, N), lambda p: (p, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((P, N, n, m), jnp.float32),
             jax.ShapeDtypeStruct((P, n, m), jnp.float32),
             jax.ShapeDtypeStruct((P, 1), jnp.float32),
             jax.ShapeDtypeStruct((P, K), jnp.float32),
+            jax.ShapeDtypeStruct((P, N), jnp.float32),
         ],
         compiler_params=CompilerParams(dimension_semantics=("parallel",)),
         interpret=interpret,
     )(r_all.astype(jnp.float32), S, V, S_local,
       f_local.astype(jnp.float32), S_star,
       f_star.astype(jnp.float32).reshape(P, 1), S_bar, mask, Q, G)
-    return s_fin, star_fin, fstar_fin[:, 0], trace
+    return s_fin, star_fin, fstar_fin[:, 0], trace, f_last

@@ -23,6 +23,8 @@ from repro.kernels.argmax_project import (greedy_project_pallas,
                                           masked_argmax_pallas)
 from repro.kernels.epoch_fused import (epoch_fused_pallas,
                                        epoch_inner_reference)
+from repro.kernels.finish_fused import (epoch_finish_pallas,
+                                        epoch_finish_reference)
 from repro.kernels.pso_fitness import (edge_fitness_pallas,
                                        edge_fitness_quantized_pallas)
 from repro.kernels.prune_fixpoint import prune_fixpoint_pallas
@@ -191,7 +193,9 @@ def epoch_fused(S, V, S_local, f_local, S_star, f_star, S_bar, mask, Q, G,
     stay device-resident for the whole loop (VMEM-resident on the fused
     path); ``S_star``/``S_bar``/``mask`` (P, n, m), ``f_star`` (P,),
     ``Q`` (P, n, n), ``G`` (P, m, m), ``r_all`` (P, K, N, 3) pre-drawn
-    uniforms. Returns ``(S_final, S_star, f_star, f_trace (P, K))``.
+    uniforms. Returns ``(S_final, S_star, f_star, f_trace (P, K),
+    f_last (P, N))`` — ``f_last`` is the last step's per-particle
+    fitness, threaded into ``epoch_finish`` instead of recomputed.
 
     Padding note: interpret mode runs UNPADDED so the fused body is
     bitwise-equal to the vmapped ref scan (zero-padding regroups f32
@@ -214,14 +218,71 @@ def epoch_fused(S, V, S_local, f_local, S_star, f_star, S_bar, mask, Q, G,
                                   S_bar, mask, Q, G, r_all, **kw)
     P, N, n, m = S.shape
     np_, mp = _round_up(n), _round_up(m)
-    s_fin, star_fin, fstar_fin, trace = epoch_fused_pallas(
+    s_fin, star_fin, fstar_fin, trace, f_last = epoch_fused_pallas(
         _pad_to(S, (np_, mp)), _pad_to(V, (np_, mp)),
         _pad_to(S_local, (np_, mp)), f_local,
         _pad_to(S_star, (np_, mp)), f_star, _pad_to(S_bar, (np_, mp)),
         _pad_to(mask, (np_, mp)), _pad_to(Q, (np_, np_)),
         _pad_to(G, (mp, mp)), _pad_to(r_all.astype(jnp.float32), (8,)),
         **kw)
-    return (s_fin[:, :, :n, :m], star_fin[:, :n, :m], fstar_fin, trace)
+    return (s_fin[:, :, :n, :m], star_fin[:, :n, :m], fstar_fin, trace,
+            f_last)
+
+
+# ---------------------------------------------------------------------------
+# Fused epoch tail (projections → Ullmann refine → feasibility → consensus)
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("gumbel_tau", "refine_threshold", "refine_iters",
+                     "elite_k", "consensus_temp", "backend"))
+def epoch_finish(S, f_final, gum, mask, Q, G, gumbel_tau: float,
+                 refine_threshold: float, refine_iters: int, elite_k: int,
+                 consensus_temp: float, backend: str = "auto"):
+    """The entire epoch epilogue, batched over problems.
+
+    ``S``: (P, N, n, m) final swarm state; ``f_final``: (P, N) the fused
+    epoch kernel's last-step fitness (threaded through — the epilogue
+    never recomputes it); ``gum``: (P, N, n, m) pre-drawn Gumbel noise
+    or ``None`` when ``gumbel_tau == 0``; ``mask``: (P, n, m); ``Q``:
+    (P, n, n); ``G``: (P, m, m). Returns ``(M_hat (P, N, n, m) uint8,
+    feasible (P, N) bool, S_bar (P, n, m) f32)``.
+
+    Padding note: interpret mode runs UNPADDED so the fused body is
+    bitwise-equal to the vmapped ref epilogue (f32 reduction grouping);
+    the compiled TPU path MXU-pads n/m — exact for the integer
+    projection/refinement/feasibility pipeline (the construction loops
+    run the logical ``n`` trips and padded mask columns never enter a
+    candidate set), allclose on the f32 consensus.
+    """
+    backend = resolve_backend(backend)
+    statics = dict(gumbel_tau=gumbel_tau,
+                   refine_threshold=refine_threshold,
+                   refine_iters=refine_iters, elite_k=elite_k,
+                   consensus_temp=consensus_temp)
+    if backend == "ref":
+        fn = functools.partial(epoch_finish_reference, **statics)
+        return jax.vmap(fn)(S, f_final, gum, mask, Q, G)
+    P, N, n, m = S.shape
+    if gum is None:
+        # dummy block (never read when gumbel_tau == 0) — a (P, 1, 1, 1)
+        # placeholder instead of a full (P, N, n, m) zeros array keeps
+        # the kernel's HBM accounting honest
+        gum = jnp.zeros((P, 1, 1, 1), jnp.float32)
+    if backend == "interpret":
+        m_hat, feas, s_bar = epoch_finish_pallas(
+            S, f_final, gum, mask, Q, G, n_rows=n, interpret=True,
+            **statics)
+        return m_hat.astype(jnp.uint8), feas != 0, s_bar
+    np_, mp = _round_up(n), _round_up(m)
+    gum_p = gum if gum.shape[2] == 1 else _pad_to(gum, (np_, mp))
+    m_hat, feas, s_bar = epoch_finish_pallas(
+        _pad_to(S, (np_, mp)), f_final, gum_p,
+        _pad_to(mask, (np_, mp)), _pad_to(Q, (np_, np_)),
+        _pad_to(G, (mp, mp)), n_rows=n, interpret=False, **statics)
+    return (m_hat[:, :, :n, :m].astype(jnp.uint8), feas != 0,
+            s_bar[:, :n, :m])
 
 
 # ---------------------------------------------------------------------------

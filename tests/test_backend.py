@@ -53,6 +53,9 @@ class _Problem:
         # with 3 pre-drawn inner steps and a seeded local-best fitness
         self.f_local = -jnp.sum(self.S * self.S, axis=(1, 2))
         self.r_steps = jnp.stack([self.r * w for w in (0.25, 0.5, 0.75)])
+        # fused-tail input: a pre-drawn Gumbel field (the epilogue's one
+        # random input, drawn host-side by ``run_epoch``)
+        self.gum = jax.random.gumbel(k5, self.S.shape, dtype=jnp.float32)
 
     def epoch_args(self):
         """(S, V, S_local, f_local, S_star, f_star, S_bar, mask, Q, G,
@@ -72,6 +75,20 @@ class _Problem:
                 two(self.S[0], -1), jnp.full((2,), -1e6, jnp.float32),
                 two(self.S.mean(0), -1), two(self.mask, -1), two(self.Q),
                 two(self.G), two(self.r_steps))
+
+    def finish_args(self):
+        """(S, f_final, gum, mask, Q, G) for one problem — the
+        ``epoch_finish`` signature (B doubles as the particle axis)."""
+        return (self.S, self.f_local, self.gum, self.mask, self.Q, self.G)
+
+    def finish_args_batch(self):
+        """Two stacked problems for ``epoch_finish_batch`` with
+        ``gum=None`` (the τ=0 calling convention)."""
+        def two(x, axis=None):
+            alt = jnp.roll(x, 1, axis=-1) if axis is not None else x
+            return jnp.stack([x, alt])
+        return (two(self.S, -1), two(self.f_local), None,
+                two(self.mask, -1), two(self.Q), two(self.G))
 
 
 _HYPER = dict(omega=0.7, c1=1.4, c2=1.4, c3=0.6, v_max=0.5)
@@ -101,6 +118,16 @@ KERNEL_CASES = {
     "epoch_fused": lambda bk, p: bk.epoch_fused(*p.epoch_args(), **_HYPER),
     "epoch_fused_batch": lambda bk, p: bk.epoch_fused_batch(
         *p.epoch_args_batch(), quantized=True, **_HYPER),
+    # the fused tail covers both projection modes across the sweep: the
+    # single-problem case runs Gumbel-perturbed, the batched case τ=0
+    "epoch_finish": lambda bk, p: bk.epoch_finish(
+        *p.finish_args(), gumbel_tau=0.3, refine_threshold=0.5,
+        refine_iters=2, elite_k=max(1, p.S.shape[0] // 2),
+        consensus_temp=25.0),
+    "epoch_finish_batch": lambda bk, p: bk.epoch_finish_batch(
+        *p.finish_args_batch(), gumbel_tau=0.0, refine_threshold=0.5,
+        refine_iters=2, elite_k=max(1, p.S.shape[0] // 2),
+        consensus_temp=25.0),
     "quantize_s": lambda bk, p: bk.quantize_s(p.S),
     "dequantize_s": lambda bk, p: bk.dequantize_s(p.S_q),
     "row_normalize_quantized":
@@ -219,8 +246,51 @@ def _legacy_run_epoch(carry, key, Q, G, mask, cfg):
     keys = jax.random.split(k_steps, cfg.inner_steps)
     (S, *_, S_star, f_star), f_trace = jax.lax.scan(
         inner, (S, V, S_local, f_local, S_star, f_star), keys)
-    return pso._epoch_finish(S, S_star, f_star, f_trace, k_gum,
-                             Q, G, mask, cfg)
+    return _legacy_epoch_finish(S, S_star, f_star, f_trace, k_gum,
+                                Q, G, mask, cfg)
+
+
+def _legacy_epoch_finish(S, S_star, f_star, f_trace, k_gum, Q, G, mask,
+                         cfg):
+    """The pre-fusion epoch epilogue, verbatim: ~6 loose dispatches
+    (structured/greedy projections, Ullmann refinement, feasibility,
+    a full ``_fitness`` RECOMPUTE of the final swarm, and the top_k
+    elite consensus). The fused tail must reproduce every output
+    bitwise — including ``fitness``, which it now threads from the
+    epoch kernel's last inner step instead of recomputing."""
+    from repro.kernels import backend as kernel_backend
+    bk = kernel_backend.for_config(cfg)
+    if cfg.gumbel_tau > 0:
+        gum = jax.random.gumbel(k_gum, S.shape, dtype=jnp.float32)
+        S_proj_a = jnp.log(jnp.clip(S.astype(jnp.float32), 1e-9, None)) \
+            + cfg.gumbel_tau * gum
+    else:
+        S_proj_a = S
+    M_a = jax.vmap(lambda s: bk.structured_project(s, Q, G, mask))(S_proj_a)
+    feas_a = jax.vmap(bk.is_feasible, in_axes=(0, None, None))(M_a, Q, G)
+    M_proj = jax.vmap(lambda s: bk.greedy_project(s, mask))(S)
+    rowmax = S.max(axis=-1, keepdims=True)
+    cand = ((S >= cfg.refine_threshold * rowmax) | (M_proj > 0))
+    cand = (cand & (mask[None] > 0)).astype(jnp.uint8)
+    cand = jax.lax.fori_loop(
+        0, cfg.refine_iters, lambda _, c: bk.ullmann_refine_step(c, Q, G),
+        cand)
+    S_restricted = S * cand.astype(S.dtype)
+    M_b = jax.vmap(lambda s, c: bk.structured_project(s, Q, G, c))(
+        S_restricted, cand)
+    empty_rows = cand.sum(-1, keepdims=True) == 0
+    M_b = jnp.where(empty_rows, M_proj, M_b).astype(jnp.uint8)
+    feas_b = jax.vmap(bk.is_feasible, in_axes=(0, None, None))(M_b, Q, G)
+    M_hat = jnp.where(feas_a[:, None, None], M_a, M_b)
+    feasible = feas_a | feas_b
+    f_final = pso._fitness(S, Q, G, cfg)
+    k = max(1, int(round(cfg.elite_frac * S.shape[0])))
+    f_top, idx = jax.lax.top_k(f_final, k)
+    w = jax.nn.softmax((f_top - f_top[0]) / cfg.consensus_temp)
+    S_bar = jnp.einsum("k,knm->nm", w, S[idx])
+    out = dict(mappings=M_hat, feasible=feasible, fitness=f_final,
+               f_star_trace=f_trace, S_final=S)
+    return (S_star, f_star, S_bar), out
 
 
 def _assert_leaves_bitwise(got, want):
@@ -231,21 +301,58 @@ def _assert_leaves_bitwise(got, want):
         np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
 
 
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
 @pytest.mark.parametrize("gumbel_tau", [0.0, 0.3])
 @pytest.mark.parametrize("quantized", [False, True])
-def test_run_epoch_bitwise_equals_legacy_scan(quantized, gumbel_tau):
-    """The refactored ``run_epoch`` (epoch prologue → fused-epoch seam →
-    epilogue) on the ``ref`` backend is BITWISE the pre-fusion inline
-    scan: same RNG key consumption, same ``f_star_trace``, same carry."""
+def test_run_epoch_bitwise_equals_legacy_scan(quantized, gumbel_tau,
+                                              backend):
+    """The refactored ``run_epoch`` (epoch prologue → fused epoch →
+    fused tail, two launches) is BITWISE the pre-fusion code (inline
+    scan + ~6 loose epilogue dispatches): same RNG key consumption,
+    same ``f_star_trace``, same carry — and the threaded ``fitness``
+    equals the legacy epilogue's full recompute, on both the ``ref``
+    oracle and the Pallas body in interpret mode."""
     p = _Problem(21, 1, 10, 18, jnp.uint8)
     cfg = pso.PSOConfig(num_particles=6, epochs=1, inner_steps=5,
                         quantized=quantized, gumbel_tau=gumbel_tau,
-                        backend="ref")
+                        backend=backend)
     key = jax.random.PRNGKey(3)
     carry0 = pso.default_carry(p.mask)
     got = pso.run_epoch(carry0, key, p.Q, p.G, p.mask, cfg)
-    want = _legacy_run_epoch(carry0, key, p.Q, p.G, p.mask, cfg)
+    want = _legacy_run_epoch(carry0, key, p.Q, p.G, p.mask,
+                             cfg.replace(backend="ref"))
     _assert_leaves_bitwise(got, want)
+
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+@pytest.mark.parametrize("gumbel_tau", [0.0, 0.3])
+@pytest.mark.parametrize("quantized", [False, True])
+def test_run_epoch_batch_bitwise_equals_vmapped_single(quantized,
+                                                       gumbel_tau,
+                                                       backend):
+    """``run_epoch_batch`` (two problem-gridded launches) is bitwise the
+    per-problem ``run_epoch`` on every backend × quantized × Gumbel
+    config — each problem's slice of the carry and outputs equals an
+    independent single-problem epoch with that problem's key."""
+    P = 2
+    p = _Problem(29, 1, 9, 15, jnp.uint8)
+    Qb = jnp.stack([p.Q] * P)
+    Gb = jnp.stack([p.G] * P)
+    maskb = jnp.stack([p.mask, jnp.roll(p.mask, 1, axis=-1)])
+    keys = jax.random.split(jax.random.PRNGKey(41), P)
+    cfg = pso.PSOConfig(num_particles=5, epochs=1, inner_steps=4,
+                        quantized=quantized, gumbel_tau=gumbel_tau,
+                        backend=backend)
+    carry0 = pso.default_carry_batch(maskb)
+    carry_b, outs_b = pso.run_epoch_batch(carry0, keys, Qb, Gb, maskb,
+                                          cfg)
+    for b in range(P):
+        carry1 = jax.tree_util.tree_map(lambda x: x[b], carry0)
+        got = (jax.tree_util.tree_map(lambda x: x[b], carry_b),
+               jax.tree_util.tree_map(lambda x: x[b], outs_b))
+        want = pso.run_epoch(carry1, keys[b], Qb[b], Gb[b], maskb[b],
+                             cfg)
+        _assert_leaves_bitwise(got, want)
 
 
 @pytest.mark.parametrize("mask_dtype", MASK_DTYPES)
@@ -273,7 +380,7 @@ def test_fused_epoch_f_star_trace_monotone(backend):
     seeded f_star, and ends at the returned f_star (both backends)."""
     p = _Problem(33, 4, 10, 18, jnp.uint8)
     args = p.epoch_args()
-    _, _, f_star, f_trace = get_backend(backend).epoch_fused(
+    _, _, f_star, f_trace, _ = get_backend(backend).epoch_fused(
         *args, **_HYPER)
     trace = np.asarray(f_trace)
     assert np.all(np.diff(trace) >= 0)
@@ -303,6 +410,102 @@ def test_epoch_rng_draws_match_scan_consumption():
     want = jax.vmap(lambda k: jax.random.uniform(k, (N, 3)))(
         jax.random.split(k_steps2, K))
     np.testing.assert_array_equal(np.asarray(r_all), np.asarray(want))
+
+
+# ---------------------- fused tail semantics -------------------------------
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_epoch_fused_f_last_equals_fitness_recompute(backend):
+    """The fused epoch's 5th output (last-step per-particle fitness) is
+    the ``_fitness`` of the returned final swarm — the identity that
+    lets the fused tail drop the pre-fusion epilogue's redundant
+    fitness launch. Semantically the two are the same op sequence on
+    the same bits; asserted here allclose-tight because XLA may group
+    the f32 residual reduction differently inside the jitted epoch
+    program than in a standalone ``_fitness`` dispatch (a last-ulp
+    effect). The *pipeline-level* bitwise bar — threaded fitness vs the
+    legacy epilogue's recompute inside ``run_epoch`` — is held by
+    ``test_run_epoch_bitwise_equals_legacy_scan``."""
+    p = _Problem(37, 6, 10, 18, jnp.uint8)
+    for quantized in (False, True):
+        args = p.epoch_args()
+        S_fin, _, _, _, f_last = get_backend(backend).epoch_fused(
+            *args, quantized=quantized, **_HYPER)
+        cfg = pso.PSOConfig(quantized=quantized, backend=backend)
+        want = pso._fitness(S_fin, p.Q, p.G, cfg)
+        np.testing.assert_allclose(np.asarray(f_last), np.asarray(want),
+                                   rtol=1e-6, atol=0)
+
+
+def test_fused_tail_consumes_legacy_gumbel_key_order():
+    """Regression: the fused tail draws its Gumbel field from the THIRD
+    split of the epoch key — the legacy ``(k_init, k_steps, k_gum)``
+    order — and a τ=0 config still splits 2-way, so the inner-step
+    stream is untouched by the Gumbel feature being off."""
+    p = _Problem(9, 1, 8, 16, jnp.uint8)
+    key = jax.random.PRNGKey(23)
+    N, K = 4, 3
+    cfg = pso.PSOConfig(num_particles=N, inner_steps=K, gumbel_tau=0.4,
+                        backend="ref")
+    carry0 = pso.default_carry(p.mask)
+    *_, k_gum = pso._epoch_start(carry0, key, p.Q, p.G, p.mask, cfg)
+    _, _, k_gum_want = jax.random.split(key, 3)
+    np.testing.assert_array_equal(np.asarray(k_gum),
+                                  np.asarray(k_gum_want))
+    # τ=0: 2-way split, and the hoisted step draws come from its k_steps
+    cfg0 = cfg.replace(gumbel_tau=0.0)
+    *_, r_all, _ = pso._epoch_start(carry0, key, p.Q, p.G, p.mask, cfg0)
+    _, k_steps = jax.random.split(key)
+    want = jax.vmap(lambda k: jax.random.uniform(k, (N, 3)))(
+        jax.random.split(k_steps, K))
+    np.testing.assert_array_equal(np.asarray(r_all), np.asarray(want))
+
+
+def test_consensus_and_refinement_route_through_seam():
+    """``pso.elite_consensus`` / ``pso.ullmann_refine_candidates`` must
+    delegate to the KernelBackend seam (a custom suite can override
+    them), and the seam's results must equal the pre-seam inline
+    top_k/refine computations bitwise."""
+    calls = []
+
+    class Spy(KernelBackend):
+        def elite_consensus(self, S_all, f_all, *, elite_k,
+                            consensus_temp):
+            calls.append(("consensus", elite_k))
+            return super().elite_consensus(
+                S_all, f_all, elite_k=elite_k,
+                consensus_temp=consensus_temp)
+
+        def ullmann_refine_candidates(self, S, M_proj, Q, G, mask, *,
+                                      refine_threshold, refine_iters):
+            calls.append(("refine", refine_iters))
+            return super().ullmann_refine_candidates(
+                S, M_proj, Q, G, mask,
+                refine_threshold=refine_threshold,
+                refine_iters=refine_iters)
+
+    try:
+        register_backend(Spy("spy-test", ops_backend="ref"))
+        p = _Problem(3, 4, 8, 16, jnp.uint8)
+        cfg = pso.PSOConfig(num_particles=4, refine_iters=2,
+                            backend="spy-test")
+        S_bar, w_total, w = pso.elite_consensus(p.S, p.f_local, cfg)
+        M_proj = jax.vmap(lambda s: ref.greedy_project(s, p.mask))(p.S)
+        M_hat, cand = pso.ullmann_refine_candidates(
+            p.S, M_proj, p.Q, p.G, p.mask, cfg)
+        assert ("consensus", 1) in calls
+        assert ("refine", 2) in calls
+        # bitwise vs the pre-seam inline code
+        f_top, idx = jax.lax.top_k(p.f_local, 1)
+        w_want = jax.nn.softmax((f_top - f_top[0]) / cfg.consensus_temp)
+        np.testing.assert_array_equal(
+            np.asarray(S_bar),
+            np.asarray(jnp.einsum("k,knm->nm", w_want, p.S[idx])))
+        assert np.asarray(M_hat).dtype == np.uint8
+        assert np.asarray(cand).shape == p.S.shape
+    finally:
+        from repro.kernels.backend import _REGISTRY
+        _REGISTRY.pop("spy-test", None)
 
 
 # ---------------------- registry + selection precedence --------------------
