@@ -1,0 +1,273 @@
+"""Drain-pipeline benchmark: pipelined vs serial host-sync discipline.
+
+Measures what the device-resident drain pipeline actually buys on warm
+multi-bucket traffic — the workload the paper's scheduling-overhead
+claim is about. Two arms run the *same* warm workload:
+
+  * **pipelined** (default ``MatcherService``): every bucket group's
+    Tier-0 launch is dispatched before anything blocks; the whole drain
+    pays ONE batched device→host fetch.
+  * **serial** (``pipelined=False``): the legacy discipline this PR
+    replaced — warm carries staged through host numpy (a blocking
+    ``np.asarray`` round trip per stored carry part) and each launch
+    blocking on its own fetch before the next is built, so the device
+    idles while the host decides.
+
+Both arms must return bitwise-identical results (asserted per repeat);
+the JSON decomposes drain wall time into the host-stall census the
+service counts (``host_syncs``, ``host_sync_wall_s``,
+``host_bytes_transferred``) so the ratio is attributable, not vibes.
+
+Outputs ``BENCH_pipeline.json`` (see ``bench_report.py``) with the
+headline ``pipelined_over_serial_ratio`` plus the regression flags CI
+gates on: ``bitwise_equal``, ``pipelined_leq_serial_ok``, and the warm
+``host_syncs_per_drain`` budget (1 sync per all-warm drain).
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.bench_pipeline --out BENCH_pipeline.json
+    PYTHONPATH=src python -m benchmarks.bench_pipeline --smoke   # CI
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import graphs, pso
+from repro.core.service import MatcherService
+
+# one planted problem per distinct (n_pad, m_pad) bucket: warm drains
+# then carry one Tier-0 revalidation launch per bucket, which is the
+# many-launches/little-host-work regime where serial per-launch syncs
+# dominate
+BUCKET_CANDS: Tuple[Tuple[int, int], ...] = (
+    (4, 8), (4, 20), (4, 36), (4, 52),
+    (10, 12), (10, 28), (10, 44), (10, 60),
+    (18, 20), (18, 36),
+)
+
+
+def _planted(seed: int, n: int, m: int):
+    key = jax.random.PRNGKey(seed)
+    kq, kt = jax.random.split(key)
+    q = graphs.random_dag(kq, n, 0.35)
+    g = graphs.embed_query_in_target(kt, q, m)
+    return q, g
+
+
+class _Workload:
+    """A fixed roster of planted warm problems, one per bucket, with
+    problem/key arrays cached so repeated drains measure the service,
+    not problem generation."""
+
+    def __init__(self, cands, max_seeds: int = 16):
+        self.cands = tuple(cands)
+        self.max_seeds = max_seeds
+        self._probs: Dict[Tuple[int, int, int], tuple] = {}
+        self._keys: Dict[int, jax.Array] = {}
+        self.specs: List[Tuple[int, int, int]] = []
+
+    def prob(self, s: int, n: int, m: int):
+        if (s, n, m) not in self._probs:
+            self._probs[(s, n, m)] = _planted(s, n, m)
+        return self._probs[(s, n, m)]
+
+    def key(self, s: int) -> jax.Array:
+        if s not in self._keys:
+            self._keys[s] = jax.random.PRNGKey(s)
+        return self._keys[s]
+
+    def warm(self, svc: MatcherService) -> List[Tuple[int, int, int]]:
+        """Drain each bucket's candidates cold then warm, and keep the
+        first seed per bucket that revalidates (Tier-0 hit + found).
+        Returns the roster (also cached on ``self.specs``)."""
+        specs = []
+        for n, m in self.cands:
+            cands = [(s, n, m) for s in range(self.max_seeds)]
+            for _ in range(2):
+                for s, n_, m_ in cands:
+                    q, g = self.prob(s, n_, m_)
+                    svc.submit(q, g, key=self.key(s),
+                               workload_key=(f"{n_}x{m_}", s))
+                warm = svc.drain()
+            good = [c for c, r in zip(cands, warm)
+                    if r.tier == 0 and r.found]
+            if not good:      # pragma: no cover - seed-dependent
+                raise RuntimeError(f"no warm candidate for bucket {n}x{m}")
+            specs.append(good[0])
+        self.specs = specs
+        return specs
+
+    def drain_once(self, svc: MatcherService):
+        """Submit the warm roster (untimed) and time one drain."""
+        for s, n, m in self.specs:
+            q, g = self.prob(s, n, m)
+            svc.submit(q, g, key=self.key(s),
+                       workload_key=(f"{n}x{m}", s))
+        t0 = time.perf_counter()
+        results = svc.drain()
+        return time.perf_counter() - t0, results
+
+
+def _fingerprint(results) -> tuple:
+    """Bitwise identity of a drain's results: mapping bytes + scalars."""
+    return tuple((np.asarray(r.mapping).tobytes(), bool(r.found),
+                  int(r.tier), float(r.f_star), int(r.epochs_run))
+                 for r in results)
+
+
+def _census_delta(svc: MatcherService, before: Dict[str, float]
+                  ) -> Dict[str, float]:
+    sd = svc.stats_dict()
+    return {k: sd[k] - before.get(k, 0)
+            for k in ("drains", "host_syncs", "host_bytes_transferred",
+                      "host_sync_wall_s", "donated_launches")}
+
+
+def bench_warm_drain(cfg: pso.PSOConfig, repeats: int) -> dict:
+    """Headline experiment: the same all-warm multi-bucket drain through
+    both arms, medians over ``repeats``, bitwise parity per repeat."""
+    wl = _Workload(BUCKET_CANDS)
+    pipe = MatcherService(cfg)
+    serial = MatcherService(cfg, pipelined=False)
+    wl.warm(pipe)
+    specs_serial = _Workload(wl.cands)
+    specs_serial._probs, specs_serial._keys = wl._probs, wl._keys
+    specs_serial.warm(serial)
+    if specs_serial.specs != wl.specs:  # pragma: no cover - determinism
+        raise RuntimeError("arms warmed onto different rosters")
+
+    wl.drain_once(pipe)
+    wl.drain_once(serial)           # one untimed settle drain per arm
+    census_p0, census_s0 = pipe.stats_dict(), serial.stats_dict()
+
+    pipe_s, serial_s = [], []
+    bitwise = True
+    all_warm = True
+    for _ in range(repeats):
+        tp, rp = wl.drain_once(pipe)
+        ts, rs = wl.drain_once(serial)
+        pipe_s.append(tp)
+        serial_s.append(ts)
+        bitwise &= _fingerprint(rp) == _fingerprint(rs)
+        all_warm &= all(r.tier == 0 and r.found for r in rp)
+
+    pm, sm = statistics.median(pipe_s), statistics.median(serial_s)
+    cp = _census_delta(pipe, census_p0)
+    cs = _census_delta(serial, census_s0)
+    out = {
+        "buckets": len(BUCKET_CANDS),
+        "problems_per_drain": len(wl.specs),
+        "repeats": repeats,
+        "pipelined_median_s": pm,
+        "serial_median_s": sm,
+        "pipelined_over_serial_ratio": pm / max(sm, 1e-12),
+        "pipelined_host_syncs_per_drain": cp["host_syncs"]
+        / max(cp["drains"], 1),
+        "serial_host_syncs_per_drain": cs["host_syncs"]
+        / max(cs["drains"], 1),
+        "pipelined_host_stall_frac": cp["host_sync_wall_s"]
+        / max(sum(pipe_s), 1e-12),
+        "serial_host_stall_frac": cs["host_sync_wall_s"]
+        / max(sum(serial_s), 1e-12),
+        "host_bytes_per_drain": cp["host_bytes_transferred"]
+        / max(cp["drains"], 1),
+        "donated_launches": cp["donated_launches"],
+        "all_tier0": bool(all_warm),
+        "bitwise_equal": bool(bitwise),
+        "pipelined_leq_serial_ok": bool(pm <= sm * 1.02),
+        "warm_single_sync_ok": bool(
+            cp["host_syncs"] / max(cp["drains"], 1) <= 1.0),
+    }
+    out["pool"] = {k: pipe.stats_dict()[k]
+                   for k in ("pool_puts", "pool_gathers", "pool_live_rows")}
+    return out
+
+
+def bench_cold_drain(cfg: pso.PSOConfig, repeats: int) -> dict:
+    """Secondary arm comparison on cold (all-swarm) drains: parity must
+    hold there too, and the single-sync budget grows to one per tier
+    stage, not per launch."""
+    wl = _Workload(BUCKET_CANDS[:4])
+    pipe = MatcherService(cfg, warm_start=False)
+    serial = MatcherService(cfg, warm_start=False, pipelined=False)
+    wl.specs = [(0, n, m) for n, m in wl.cands]
+    wl.drain_once(pipe)
+    wl.drain_once(serial)           # compile
+    census_p0, census_s0 = pipe.stats_dict(), serial.stats_dict()
+    pipe_s, serial_s, bitwise = [], [], True
+    for _ in range(repeats):
+        tp, rp = wl.drain_once(pipe)
+        ts, rs = wl.drain_once(serial)
+        pipe_s.append(tp)
+        serial_s.append(ts)
+        bitwise &= _fingerprint(rp) == _fingerprint(rs)
+    pm, sm = statistics.median(pipe_s), statistics.median(serial_s)
+    cp = _census_delta(pipe, census_p0)
+    cs = _census_delta(serial, census_s0)
+    return {
+        "buckets": len(wl.cands),
+        "repeats": repeats,
+        "pipelined_median_s": pm,
+        "serial_median_s": sm,
+        "pipelined_over_serial_ratio": pm / max(sm, 1e-12),
+        "pipelined_host_syncs_per_drain": cp["host_syncs"]
+        / max(cp["drains"], 1),
+        "serial_host_syncs_per_drain": cs["host_syncs"]
+        / max(cs["drains"], 1),
+        "bitwise_equal": bool(bitwise),
+        # cold drains are swarm-compute-bound; the dispatch discipline is
+        # in the noise there, so this is informational, not a gate
+        "pipelined_leq_serial_diagnostic": bool(pm <= sm * 1.10),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config + few repeats (CI gate)")
+    ap.add_argument("--repeats", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_pipeline.json")
+    args = ap.parse_args()
+
+    if args.smoke:
+        cfg = pso.PSOConfig(num_particles=8, epochs=2, inner_steps=4)
+        repeats = args.repeats or 7
+    else:
+        cfg = pso.PSOConfig(num_particles=32, epochs=2, inner_steps=8)
+        repeats = args.repeats or 41
+
+    report = {
+        "bench": "pipeline",
+        "smoke": bool(args.smoke),
+        "backend": jax.default_backend(),
+        "jax": jax.__version__,
+        "config": {"num_particles": cfg.num_particles, "epochs": cfg.epochs,
+                   "inner_steps": cfg.inner_steps},
+        "warm_drain": bench_warm_drain(cfg, repeats),
+        "cold_drain": bench_cold_drain(cfg, max(repeats // 3, 3)),
+    }
+
+    with open(args.out, "w") as fh:
+        json.dump(report, fh, indent=2, sort_keys=True)
+
+    for name in ("warm_drain", "cold_drain"):
+        r = report[name]
+        print(f"{name},pipelined_us,{r['pipelined_median_s'] * 1e6:.1f}")
+        print(f"{name},serial_us,{r['serial_median_s'] * 1e6:.1f}")
+        print(f"{name},ratio,{r['pipelined_over_serial_ratio']:.3f}")
+        print(f"{name},bitwise_equal,{r['bitwise_equal']}")
+    wd = report["warm_drain"]
+    print(f"warm_drain,host_syncs_per_drain,"
+          f"{wd['pipelined_host_syncs_per_drain']:.2f}")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

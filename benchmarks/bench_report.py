@@ -36,7 +36,7 @@ import os
 from typing import Dict, List, Tuple
 
 _RATIO_MARKERS = ("ratio", "speedup", "utilization", "occupancy",
-                  "hit_rate")
+                  "hit_rate", "per_drain")
 _FLAG_MARKERS = ("parity", "_ok", "pass", "match", "bitwise", "allclose",
                  "feasible", "equal")
 # Leaves a bench marks as informational, not a gate (e.g. the tail's

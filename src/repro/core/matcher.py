@@ -57,7 +57,13 @@ def collect_result(outs, order=None, crop=None) -> MatchResult:
     ``order``: topological relabelling to undo (rows back to caller
     order). ``crop``: logical ``(n, m)`` to strip shape-bucket padding to
     before undoing the relabelling (used by the online service).
+
+    Device output pytrees are fetched with ONE blocking ``device_get``
+    up front (a single host sync for the whole result) instead of one
+    implicit transfer per leaf; already-fetched host trees pass through
+    untouched.
     """
+    outs = jax.device_get(outs)
     feas = np.asarray(outs["feasible"]).reshape(-1)
     fit = np.asarray(outs["fitness"]).reshape(-1)
     maps = np.asarray(outs["mappings"])
@@ -110,7 +116,7 @@ def split_batch_outs(outs, batch: int):
     would produce, so it feeds straight into ``collect_result``.
     """
     per_epoch = {"mappings", "feasible", "fitness", "f_star_trace"}
-    host = {k: np.asarray(v) for k, v in outs.items()}  # one copy per leaf
+    host = jax.device_get(dict(outs))   # ONE sync for the whole pytree
     return [{k: (v[:, b] if k in per_epoch else v[b])
              for k, v in host.items()}
             for b in range(batch)]
@@ -335,11 +341,12 @@ def build_distributed_revalidate_batch(Q_shape: Tuple[int, int], mesh: Mesh,
                     (shard_b, shard_b, shard_b))
         out_specs = dict(mapping=shard_b, ok=shard_b, ok_rebase=shard_b,
                          fitness=shard_b, S_star=shard_b, S_bar=shard_b,
-                         prune_sweeps=shard_b)
+                         prune_sweeps=shard_b, f_carry=shard_b)
     else:
         in_specs = (P(), P(), P(), (P(), P(), P()))
         out_specs = dict(mapping=P(), ok=P(), ok_rebase=P(), fitness=P(),
-                         S_star=P(), S_bar=P(), prune_sweeps=P())
+                         S_star=P(), S_bar=P(), prune_sweeps=P(),
+                         f_carry=P())
     fn = shard_map(local_reval, mesh=mesh, in_specs=in_specs,
                    out_specs=out_specs)
     return _mark_mesh_executable(jax.jit(fn))

@@ -249,13 +249,19 @@ def carry_leaves(prefix: str, carries: Sequence[tuple]
     ``{leaf-name: np.ndarray}`` dict (the shape CheckpointManager's
     per-leaf .npy layout wants). Leaf names are ``{prefix}.{i}.{part}``
     with ``part`` in S/f/C; entries keep their list order so restores
-    preserve LRU recency."""
-    out: Dict[str, np.ndarray] = {}
+    preserve LRU recency.
+
+    Carries may be device arrays (the service keeps them device-resident
+    between drains): the whole batch is materialized with ONE blocking
+    ``jax.device_get`` at save time — a single host sync per snapshot —
+    instead of one implicit transfer per leaf."""
+    out: Dict[str, Any] = {}
     for i, (s, f, c) in enumerate(carries):
-        out[f"{prefix}.{i:05d}.S"] = np.asarray(s)
-        out[f"{prefix}.{i:05d}.f"] = np.asarray(f)
-        out[f"{prefix}.{i:05d}.C"] = np.asarray(c)
-    return out
+        out[f"{prefix}.{i:05d}.S"] = s
+        out[f"{prefix}.{i:05d}.f"] = f
+        out[f"{prefix}.{i:05d}.C"] = c
+    host = jax.device_get(out)
+    return {k: np.asarray(v) for k, v in host.items()}
 
 
 def carries_from_leaves(prefix: str, leaves: Dict[str, np.ndarray],

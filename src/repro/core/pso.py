@@ -407,6 +407,11 @@ def _revalidate_batch_body(Qb: jax.Array, Gb: jax.Array, maskb: jax.Array,
         lambda c, Q, G, mk: revalidate_carry(c, Q, G, mk, cfg)
     )(carry0, Qb, Gb, maskb)
     outs["prune_sweeps"] = prune_sweeps
+    # echo the carried f* through the launch: the service reads the
+    # stored-fitness of Tier-0 hits from the (single) batched output
+    # fetch instead of a per-item host sync, and the echo stays valid
+    # even when the stacked carry input buffers were donated to XLA
+    outs["f_carry"] = jnp.asarray(carry0[1], jnp.float32)
     return outs
 
 
@@ -422,9 +427,12 @@ def revalidate_batch(Qb: jax.Array, Gb: jax.Array, maskb: jax.Array,
     ``carry0`` holds the per-problem carries to re-validate (exact warm
     carries for Tier 0, nearest-neighbour carries for Tier 1 — the rebase
     inside makes both cases one kernel). Returns a pytree of
-    ``mapping`` (B, n, m) uint8, ``ok`` (B,) bool, ``fitness`` (B,) f32
-    and the rebased ``S_star``/``S_bar``. Cost is one jit dispatch and
-    one projection per problem — no swarm, no epochs.
+    ``mapping`` (B, n, m) uint8, ``ok`` (B,) bool, ``fitness`` (B,) f32,
+    the rebased ``S_star``/``S_bar``, and ``f_carry`` (B,) f32 — the
+    carried f* echoed through the launch so callers can read it from the
+    output fetch even after donating the carry input buffers. Cost is
+    one jit dispatch and one projection per problem — no swarm, no
+    epochs.
     """
     return _revalidate_batch_impl(Qb, Gb, maskb, cfg, carry0)
 
@@ -682,13 +690,29 @@ def match(key: jax.Array, Q: jax.Array, G: jax.Array, mask: jax.Array,
 
 
 def best_feasible(outs) -> Optional[jnp.ndarray]:
-    """Host-side helper: highest-fitness feasible mapping or None."""
+    """Highest-fitness feasible mapping of an epoch trace, or None.
+
+    The select runs on device: the feasibility flags and fitness values
+    stay resident, the winning row is picked with one masked argmax, and
+    only an any-feasible scalar plus that single (n, m) mapping cross to
+    the host — not the full (T·N, n, m) trace a per-leaf ``np.asarray``
+    used to move.
+    """
     import numpy as np
-    feas = np.asarray(outs["feasible"]).reshape(-1)
-    if not feas.any():
-        return None
-    fit = np.asarray(outs["fitness"]).reshape(-1)
-    maps = np.asarray(outs["mappings"])
+    feas = jnp.ravel(jnp.asarray(outs["feasible"]))
+    fit = jnp.ravel(jnp.asarray(outs["fitness"]))
+    maps = jnp.asarray(outs["mappings"])
     maps = maps.reshape(-1, maps.shape[-2], maps.shape[-1])
-    idx = np.where(feas)[0]
-    return maps[idx[np.argmax(fit[idx])]]
+    # feasible entries rank by their own fitness (-inf fits clamped to
+    # the finite minimum so they still outrank every infeasible slot)
+    fmin = jnp.finfo(jnp.float32).min
+    score = jnp.where(feas,
+                      jnp.nan_to_num(fit.astype(jnp.float32),
+                                     neginf=fmin, posinf=jnp.finfo(
+                                         jnp.float32).max),
+                      -jnp.inf)
+    idx = jnp.argmax(score)
+    any_feasible, best = jax.device_get((feas.any(), maps[idx]))
+    if not bool(any_feasible):
+        return None
+    return np.asarray(best)

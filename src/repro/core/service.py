@@ -58,9 +58,11 @@ exported via ``stats`` / ``stats_dict()`` and surfaced by
 from __future__ import annotations
 
 import dataclasses
+import functools
 import hashlib
 import os
 import time
+import warnings
 from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
@@ -79,6 +81,12 @@ from repro.core.matcher import (MatchResult, build_distributed_match,
                                 collect_batch_results, collect_result)
 from repro.core.preemptible_dag import pad_problem
 from repro.kernels import backend as kernel_backend
+from repro.kernels import pallas_compat
+
+
+# process-global latch: the export-drops-donation degradation warning
+# fires at most once however many services a process builds
+_DONATION_EXPORT_WARNED: List[bool] = []
 
 
 def _round_up(v: int, mult: int) -> int:
@@ -181,6 +189,16 @@ class ServiceStats:
     fe_drain_flush: int = 0          # rounds fired by explicit flush
     fe_queue_peak: int = 0           # max observed queue depth
     fe_wait_s: float = 0.0           # total queue-wait time (admit→drain)
+    # -- host-sync census (device-resident drain pipeline) --------------
+    drains: int = 0                  # drain rounds that flushed requests
+    host_syncs: int = 0              # blocking device→host fetches
+                                     # (one per pipeline stage under the
+                                     # pipelined drain; one per launch
+                                     # under the serial arm)
+    host_bytes_transferred: int = 0  # payload bytes those fetches moved
+    host_sync_wall_s: float = 0.0    # wall time spent blocked in fetches
+    donated_launches: int = 0        # launches that donated their carry
+                                     # input buffers to XLA
     tier0: TierStats = dataclasses.field(default_factory=TierStats)
     tier1: TierStats = dataclasses.field(default_factory=TierStats)
     tier2: TierStats = dataclasses.field(default_factory=TierStats)
@@ -221,6 +239,15 @@ class ServiceStats:
         if self.batch_slots == 0:
             return 1.0
         return self.batch_problems / self.batch_slots
+
+    @property
+    def host_syncs_per_drain(self) -> float:
+        """Blocking device→host fetches per drain round — the pipelined
+        drain's budget is ONE for an all-warm burst (one batched fetch
+        for every Tier-0 launch of every bucket group) and at most one
+        per engaged tier otherwise. Counts single ``match`` calls too,
+        so read it on drain-only traffic for the regression gate."""
+        return self.host_syncs / max(self.drains, 1)
 
 
 @dataclasses.dataclass
@@ -267,6 +294,30 @@ class _PipelineItem:
     result: Optional[ServiceMatchResult] = None
 
 
+@dataclasses.dataclass(eq=False)
+class _LaunchRecord:
+    """One dispatched-but-not-fetched launch of the drain pipeline.
+
+    The pipelined drain splits every tier launch into a *dispatch* half
+    (build inputs, enqueue the jit call — JAX returns immediately with
+    futures) and an *apply* half (consume the fetched host outputs).
+    Records carry everything the apply half needs, so all launches of a
+    stage can dispatch back-to-back and resolve through ONE batched
+    blocking ``device_get``."""
+    kind: str                        # "reval" | "swarm"
+    bucket: Tuple[int, int]
+    items: List[_PipelineItem]
+    tier: int
+    B: int                           # real problems in the launch
+    bclass: int                      # padded batch class dispatched
+    compile_hit: bool
+    outs: dict                       # device-side output pytree (futures)
+    carries: Optional[List] = None   # reval: per-item input carries
+    padded: Optional[List] = None    # swarm: padded request list
+    miss_sink: Optional[List] = None # reval: where misses are appended
+    t0: float = 0.0                  # dispatch timestamp
+
+
 class CarryStore:
     """Two-level warm-start store for the tiered pipeline.
 
@@ -288,6 +339,18 @@ class CarryStore:
     bins instead of scanning the store. The exhaustive linear scan is
     kept as ``_nearest_linear`` (``sim_index=False`` fallback, and the
     oracle the index is property-tested against).
+
+    Popcounts are computed ONCE on host numpy when an entry is ingested
+    (``_sim_pop``) — ``put``/``nearest`` never reduce a bit vector per
+    stored entry again, so no store operation can turn into a per-entry
+    device sync however the bits arrive.
+
+    The store is payload-agnostic (tests store plain ints), but it
+    participates in device-carry lifetime management: any stored value
+    exposing ``retain``/``release`` (the service's
+    :class:`DeviceCarryPool` handles) is retained on insert and released
+    when it is overwritten or evicted, so slab rows are reclaimed the
+    moment no store references them.
     """
 
     def __init__(self, capacity: int, sim_capacity: int,
@@ -306,6 +369,8 @@ class CarryStore:
         # (qdigest, bucket, bit-length) -> {popcount: OrderedDict[sig]}
         self._sim_buckets: Dict[Tuple, Dict[int, "OrderedDict[bytes, None]"]] \
             = {}
+        # per-entry popcount, computed once at ingest (host numpy)
+        self._sim_pop: Dict[Tuple, int] = {}
 
     def __len__(self) -> int:
         return len(self._exact)
@@ -315,12 +380,30 @@ class CarryStore:
         """Number of entries currently in the similarity store."""
         return len(self._sim)
 
+    @staticmethod
+    def _retain(carry) -> None:
+        r = getattr(carry, "retain", None)
+        if callable(r):
+            r()
+
+    @staticmethod
+    def _release(carry) -> None:
+        r = getattr(carry, "release", None)
+        if callable(r):
+            r()
+
     def clear(self) -> None:
-        """Drop both stores and the derived popcount index/recency."""
+        """Drop both stores and the derived popcount index/recency,
+        releasing every device-pool carry they referenced."""
+        for c in self._exact.values():
+            self._release(c)
+        for _, c in self._sim.values():
+            self._release(c)
         self._exact.clear()
         self._sim.clear()
         self._sim_seq.clear()
         self._sim_buckets.clear()
+        self._sim_pop.clear()
 
     # -- exact tier --------------------------------------------------------
 
@@ -335,52 +418,69 @@ class CarryStore:
         return None, False
 
     def put(self, key, carry) -> None:
-        """Store ``carry`` (a ``(S*, f*, S̄)`` tuple of (n, m)/(n, m)/
-        scalar arrays) under the exact content key, evicting LRU
-        entries beyond ``capacity``."""
+        """Store ``carry`` (a ``(S*, f*, S̄)`` tuple of (n, m)/scalar/
+        (n, m) arrays, or a device-pool handle of one) under the exact
+        content key, evicting LRU entries beyond ``capacity``."""
+        old = self._exact.get(key)
+        if old is not None and old is not carry:
+            self._release(old)
+        if old is not carry:
+            self._retain(carry)
         self._exact[key] = carry
         while len(self._exact) > self.capacity:
-            self._exact.popitem(last=False)
+            _, evicted = self._exact.popitem(last=False)
+            self._release(evicted)
             self.stats.warm_evictions += 1
 
     # -- similarity tier ---------------------------------------------------
 
     @staticmethod
     def _bits(sig: bytes) -> np.ndarray:
-        return signature_bits(sig)
+        return np.asarray(signature_bits(sig))
 
     def put_similar(self, qdigest: str, bucket: Tuple[int, int],
                     sig: bytes, carry) -> None:
         """Store ``carry`` under the similarity key (query digest, shape
         bucket, free-engine signature) and index it by signature
-        popcount; refreshes recency for most-recent-wins ``nearest``
-        tiebreaks."""
+        popcount (computed once, at ingest); refreshes recency for
+        most-recent-wins ``nearest`` tiebreaks."""
         key = (qdigest, bucket, sig)
         bits = self._bits(sig)
-        fresh = key not in self._sim
+        prev = self._sim.get(key)
+        fresh = prev is None
+        if not fresh and prev[1] is not carry:
+            self._release(prev[1])
+        if fresh or prev[1] is not carry:
+            self._retain(carry)
         self._sim[key] = (bits, carry)
         self._sim.move_to_end(key)
         self._seq += 1
         self._sim_seq[key] = self._seq
         if fresh:
+            pc = int(bits.sum())
+            self._sim_pop[key] = pc
             group = self._sim_buckets.setdefault(
                 (qdigest, bucket, bits.shape[0]), {})
-            group.setdefault(int(bits.sum()), OrderedDict())[sig] = None
+            group.setdefault(pc, OrderedDict())[sig] = None
         while len(self._sim) > self.sim_capacity:
-            old_key, (old_bits, _) = self._sim.popitem(last=False)
+            old_key, (old_bits, old_carry) = self._sim.popitem(last=False)
             self._drop_sim_key(old_key, old_bits)
+            self._release(old_carry)
             self.stats.sim_evictions += 1
 
     def _drop_sim_key(self, key: Tuple, bits: np.ndarray) -> None:
         """Remove an evicted similarity entry from the popcount index
-        (``bits``: the entry's already-unpacked bit vector)."""
+        (``bits``: the entry's already-unpacked bit vector; the entry's
+        popcount comes from the ingest-time cache, not a recount)."""
         qd, bk, sig = key
         self._sim_seq.pop(key, None)
+        pc = self._sim_pop.pop(key, None)
         gkey = (qd, bk, bits.shape[0])
         group = self._sim_buckets.get(gkey)
         if group is None:
             return
-        pc = int(bits.sum())
+        if pc is None:  # pragma: no cover - pre-index entries
+            pc = int(bits.sum())
         bin_ = group.get(pc)
         if bin_ is not None:
             bin_.pop(sig, None)
@@ -489,6 +589,216 @@ class CarryStore:
         return best
 
 
+@functools.lru_cache(maxsize=64)
+def _pool_writer(cap: int, n: int, m: int):
+    """Jitted donated row write for one slab shape: all three carry
+    parts land in their slabs in-place (``donate_argnums`` lets XLA
+    alias the outputs onto the input buffers, so a put never doubles
+    the slab's footprint). One trace per (capacity, n, m)."""
+    def write(Sb, fb, Cb, s, f, c, row):
+        Sb = jax.lax.dynamic_update_index_in_dim(Sb, s, row, 0)
+        fb = jax.lax.dynamic_update_index_in_dim(fb, f, row, 0)
+        Cb = jax.lax.dynamic_update_index_in_dim(Cb, c, row, 0)
+        return Sb, fb, Cb
+
+    return jax.jit(write, donate_argnums=(0, 1, 2))
+
+
+class _CarryHandle:
+    """Refcounted reference to one slab row of a :class:`DeviceCarryPool`.
+
+    Stored in :class:`CarryStore` in place of a raw carry tuple: each
+    store that holds the handle ``retain``\\ s it, and the row is
+    returned to the pool's free list when the last reference is
+    ``release``\\ d (eviction, overwrite, or ``clear``). ``materialize``
+    yields the ``(S*, f*, S̄)`` view lazily — device slices, no host
+    sync."""
+
+    __slots__ = ("pool", "shape", "row", "refs")
+
+    def __init__(self, pool: "DeviceCarryPool", shape: Tuple[int, int],
+                 row: int):
+        self.pool = pool
+        self.shape = shape
+        self.row = row
+        self.refs = 0
+
+    def retain(self) -> None:
+        """Count one more store holding this row."""
+        self.refs += 1
+
+    def release(self) -> None:
+        """Drop one reference; frees the slab row at zero."""
+        self.refs -= 1
+        if self.refs <= 0 and self.row >= 0:
+            self.pool._free(self.shape, self.row)
+            self.row = -1
+
+    def materialize(self) -> tuple:
+        """The stored ``(S*, f*, S̄)`` as lazy device slices."""
+        return self.pool._read(self.shape, self.row)
+
+    def __iter__(self):
+        """Duck-type as the carry tuple itself: iterating a handle
+        yields the materialized ``(S*, f*, S̄)`` device parts."""
+        return iter(self.materialize())
+
+    def __len__(self) -> int:
+        return 3
+
+
+class _LazyCarry:
+    """Tuple-shaped view of a pooled carry handed out in results.
+
+    Slicing three device arrays out of the pool costs real dispatch
+    time, and most callers never look at ``result.carry`` — so Tier-0
+    hits hand out this view instead. It retains the handle (pinning the
+    slab row even if the store evicts the entry later) and slices the
+    parts out only on first access; the reference drops when the view
+    is garbage-collected."""
+
+    __slots__ = ("_handle", "_parts")
+
+    def __init__(self, handle: "_CarryHandle"):
+        handle.retain()
+        self._handle = handle
+        self._parts = None
+
+    def materialize(self) -> tuple:
+        if self._parts is None:
+            # once sliced, the parts reference the slab *value* at this
+            # moment (jax arrays are immutable), so the row pin can drop
+            self._parts = self._handle.materialize()
+            self._handle.release()
+            self._handle = None
+        return self._parts
+
+    def __iter__(self):
+        return iter(self.materialize())
+
+    def __len__(self) -> int:
+        return 3
+
+    def __getitem__(self, i):
+        return self.materialize()[i]
+
+    def __del__(self):
+        h = self._handle
+        if h is not None:
+            try:
+                h.release()
+            except Exception:  # pragma: no cover - interpreter teardown
+                pass
+
+
+class DeviceCarryPool:
+    """Device-resident slab storage for warm-start carries.
+
+    Carries used to live in the :class:`CarryStore` as loose per-entry
+    arrays; every drain re-assembled its batch inputs with host
+    ``np.stack([np.asarray(...)])`` — a blocking device→host→device
+    round trip per launch. This pool keeps one growable slab triple per
+    padded shape — ``S``: (cap, n, m), ``f``: (cap,), ``C``: (cap, n, m),
+    all float32, all device-resident — and hands out refcounted
+    :class:`_CarryHandle` rows:
+
+      * ``put`` writes a row through a donated jit update (in place, no
+        slab copy),
+      * ``gather`` turns a batch of handles into stacked launch inputs
+        with ONE ``jnp.take`` per part — device-side, dispatched
+        asynchronously, never a host sync,
+      * rows are recycled through a free list as store evictions release
+        their handles.
+
+    Slabs grow geometrically (``jnp.concatenate`` with a zero block), so
+    amortized put cost stays O(row). The pool never syncs to host; the
+    persistence layer materializes handles lazily at snapshot-save time.
+    """
+
+    def __init__(self, block: int = 32):
+        self.block = max(int(block), 1)
+        self._slabs: Dict[Tuple[int, int], dict] = {}
+        self.puts = 0                # rows written (donated updates)
+        self.gathers = 0             # batched jnp.take gathers served
+        # steady-state warm drains gather the same row sets every time;
+        # caching the device index array saves a host→device transfer
+        # dispatch per launch
+        self._idx_cache: "OrderedDict[tuple, jax.Array]" = OrderedDict()
+
+    def _slab_for(self, shape: Tuple[int, int]) -> dict:
+        slab = self._slabs.get(shape)
+        if slab is None:
+            n, m = shape
+            cap = self.block
+            slab = {"S": jnp.zeros((cap, n, m), jnp.float32),
+                    "f": jnp.zeros((cap,), jnp.float32),
+                    "C": jnp.zeros((cap, n, m), jnp.float32),
+                    "free": list(range(cap - 1, -1, -1)), "cap": cap}
+            self._slabs[shape] = slab
+        if not slab["free"]:
+            old = slab["cap"]
+            grow = max(old, self.block)
+            n, m = shape
+            slab["S"] = jnp.concatenate(
+                [slab["S"], jnp.zeros((grow, n, m), jnp.float32)])
+            slab["f"] = jnp.concatenate(
+                [slab["f"], jnp.zeros((grow,), jnp.float32)])
+            slab["C"] = jnp.concatenate(
+                [slab["C"], jnp.zeros((grow, n, m), jnp.float32)])
+            slab["cap"] = old + grow
+            slab["free"] = list(range(old + grow - 1, old - 1, -1))
+        return slab
+
+    def put(self, carry: tuple) -> _CarryHandle:
+        """Write one ``(S*, f*, S̄)`` carry into a slab row (donated
+        in-place update) and return its (unretained) handle. Accepts
+        device or host arrays; parts are cast to the slab's float32."""
+        S = jnp.asarray(carry[0], jnp.float32)
+        f = jnp.asarray(carry[1], jnp.float32)
+        C = jnp.asarray(carry[2], jnp.float32)
+        shape = (int(S.shape[0]), int(S.shape[1]))
+        slab = self._slab_for(shape)
+        row = slab["free"].pop()
+        writer = _pool_writer(slab["cap"], *shape)
+        slab["S"], slab["f"], slab["C"] = writer(
+            slab["S"], slab["f"], slab["C"], S, f, C, jnp.int32(row))
+        self.puts += 1
+        return _CarryHandle(self, shape, row)
+
+    def gather(self, handles: Sequence[_CarryHandle]) -> tuple:
+        """Stacked ``(S, f, C)`` launch inputs for a batch of same-shape
+        handles — one ``jnp.take`` per part, all on device. The result
+        is freshly allocated, so callers may donate it to a launch."""
+        shape = handles[0].shape
+        slab = self._slabs[shape]
+        rows = tuple(h.row for h in handles)
+        idx = self._idx_cache.get(rows)
+        if idx is None:
+            idx = jnp.asarray(rows, jnp.int32)
+            self._idx_cache[rows] = idx
+            while len(self._idx_cache) > 256:
+                self._idx_cache.popitem(last=False)
+        self.gathers += 1
+        return (jnp.take(slab["S"], idx, axis=0),
+                jnp.take(slab["f"], idx, axis=0),
+                jnp.take(slab["C"], idx, axis=0))
+
+    def _read(self, shape: Tuple[int, int], row: int) -> tuple:
+        slab = self._slabs[shape]
+        return (slab["S"][row], slab["f"][row], slab["C"][row])
+
+    def _free(self, shape: Tuple[int, int], row: int) -> None:
+        slab = self._slabs.get(shape)
+        if slab is not None:
+            slab["free"].append(row)
+
+    @property
+    def live_rows(self) -> int:
+        """Rows currently referenced by at least one store entry."""
+        return sum(s["cap"] - len(s["free"])
+                   for s in self._slabs.values())
+
+
 class MatcherService:
     """Warm-start online wrapper around Algorithm 1.
 
@@ -536,6 +846,8 @@ class MatcherService:
                  batch_classes: Sequence[int] = (1, 2, 4, 8),
                  tiered: bool = True, similarity: bool = True,
                  sim_capacity: int = 128, sim_index: bool = True,
+                 pipelined: bool = True,
+                 donate_buffers: Optional[bool] = None,
                  persist_dir: Union[str, bool, None] = None,
                  aot_cache: Optional[bool] = None,
                  snapshot_keep: int = 3):
@@ -553,9 +865,20 @@ class MatcherService:
         assert self.batch_classes and self.batch_classes[0] >= 1
         self.tiered = tiered
         self.similarity = similarity
+        # pipelined=False restores the legacy serial drain (host-staged
+        # carry stacking, dispatch → blocking fetch per launch) — the
+        # baseline arm bench_pipeline measures the pipeline against
+        self.pipelined = bool(pipelined)
+        if donate_buffers is None:
+            donate_buffers = pallas_compat.donation_supported()
+        self.donate_buffers = bool(donate_buffers)
         self.stats = ServiceStats()
         self._carries = CarryStore(warm_capacity, sim_capacity, self.stats,
                                    sim_index=sim_index)
+        self._pool = DeviceCarryPool()
+        # per-bucket pre-finished pad carry, pooled once and pinned so
+        # padded warm batches stay all-handle (one-gather launch inputs)
+        self._pad_handles: Dict[Tuple[int, int], _CarryHandle] = {}
         self._compiled: "OrderedDict[Tuple, object]" = OrderedDict()
         self._pending: List[_PendingRequest] = []
         # -- persistence wiring -------------------------------------------
@@ -579,6 +902,19 @@ class MatcherService:
                 async_save=False, keep=snapshot_keep)
             persist.enable_jax_compilation_cache(
                 os.path.join(self.persist_dir, "xla"))
+        if self._aot is not None and self.donate_buffers \
+                and not _DONATION_EXPORT_WARNED \
+                and not pallas_compat.export_preserves_donation():
+            # degrade LOUDLY (once per process): results stay correct,
+            # but AOT-restored executables run without the in-place
+            # carry update
+            _DONATION_EXPORT_WARNED.append(True)
+            warnings.warn(
+                "jax.export round trips drop donate_argnums on this "
+                "toolchain: AOT-cached executables will not update "
+                "carry buffers in place (correctness is unaffected). "
+                "Pass donate_buffers=False to silence.",
+                RuntimeWarning, stacklevel=2)
 
     @property
     def warm_capacity(self) -> int:
@@ -597,7 +933,7 @@ class MatcherService:
         and snapshots from a process whose digest differs are ignored."""
         return kernel_backend.config_digest(
             self.cfg,
-            extra=("svc-v1", jax.__version__, jax.default_backend(),
+            extra=("svc-v2", jax.__version__, jax.default_backend(),
                    self.n_multiple, self.m_multiple, self.batch_classes,
                    self.mesh is not None))
 
@@ -684,7 +1020,8 @@ class MatcherService:
                     return pso._match_batch_body(keys, Qb, Gb, maskb, _cfg,
                                                  carry0)
 
-                return jax.jit(fn)
+                return jax.jit(
+                    fn, donate_argnums=self._donate_argnums("batch"))
             return build_distributed_match_batch(bucket, self.mesh,
                                                  self.cfg, self.axis_names,
                                                  bclass)
@@ -702,7 +1039,8 @@ class MatcherService:
                     return pso._revalidate_batch_body(Qb, Gb, maskb, _cfg,
                                                       carry0)
 
-                return jax.jit(fn)
+                return jax.jit(
+                    fn, donate_argnums=self._donate_argnums("reval"))
             return build_distributed_revalidate_batch(
                 bucket, self.mesh, self.cfg, self.axis_names, bclass)
 
@@ -737,15 +1075,26 @@ class MatcherService:
             self._carries.put(warm_key, carry)
 
     def _store_result_carries(self, req: _PendingRequest, warm_key,
-                              res: MatchResult) -> None:
+                              res: MatchResult, dev_carry=None) -> None:
         """Store a fresh carry under the exact key, and — when the call
         produced a served decision on a known platform state — under the
-        similarity key too, so future drifted states can rebase it."""
-        self._put_carry(warm_key, res.carry)
-        if (self.warm_start and self.similarity and res.found
-                and req.engine_sig is not None):
+        similarity key too, so future drifted states can rebase it.
+
+        ``dev_carry`` (the launch's still-on-device ``(S*, f*, S̄)``
+        slices) keeps the stored copy device-resident: it lands in the
+        :class:`DeviceCarryPool` without ever visiting the host. Without
+        it the result's host carry is uploaded once at store time."""
+        if not self.warm_start:
+            return
+        carry = res.carry if dev_carry is None else dev_carry
+        # mesh-sharded services skip the (single-device) pool: their
+        # launch outputs carry mesh shardings the slabs can't hold
+        stored = self._pool.put(self._carry_tuple(carry)) \
+            if self.mesh is None else res.carry
+        self._put_carry(warm_key, stored)
+        if (self.similarity and res.found and req.engine_sig is not None):
             self._carries.put_similar(req.qdigest, req.bucket,
-                                      req.engine_sig, res.carry)
+                                      req.engine_sig, stored)
 
     # -- snapshots ---------------------------------------------------------
 
@@ -777,7 +1126,9 @@ class MatcherService:
             except TypeError:
                 self.stats.snapshot_skipped_keys += 1
                 continue
-            exact_carries.append(c)
+            # device-pool handles materialize to lazy device slices here;
+            # the ONE blocking transfer happens inside carry_leaves
+            exact_carries.append(self._carry_tuple(c))
         sim_keys, sim_carries = [], []
         for k, c in sim_items:
             try:
@@ -785,7 +1136,7 @@ class MatcherService:
             except TypeError:
                 self.stats.snapshot_skipped_keys += 1
                 continue
-            sim_carries.append(c)
+            sim_carries.append(self._carry_tuple(c))
         arrays.update(persist.carry_leaves("exact", exact_carries))
         arrays.update(persist.carry_leaves("sim", sim_carries))
         # flat-dict checkpoints must be non-empty for restore_flat to see
@@ -845,6 +1196,12 @@ class MatcherService:
             "exact", arrays, len(exact_keys))
         sim_carries = persist.carries_from_leaves(
             "sim", arrays, len(sim_keys))
+        if self.mesh is None:
+            # restored carries go straight back to device residency: one
+            # pool row per entry, uploaded once; rows free themselves as
+            # store replay/evictions release the handles
+            exact_carries = [self._pool.put(c) for c in exact_carries]
+            sim_carries = [self._pool.put(c) for c in sim_carries]
         n_exact, n_sim = self._carries.import_state(
             list(zip(exact_keys, exact_carries)),
             list(zip(sim_keys, sim_carries)))
@@ -904,6 +1261,98 @@ class MatcherService:
         return (self.tiered and self.warm_start
                 and self.cfg.early_exit and self.cfg.carry_fastpath)
 
+    # -- device residency --------------------------------------------------
+
+    def _sync_fetch(self, tree):
+        """THE blocking device→host transfer of the drain pipeline.
+
+        Fetches a whole pytree (typically every pending launch's outputs)
+        with one ``jax.device_get`` and records it in the host-sync
+        census: ``host_syncs`` (count), ``host_bytes_transferred``
+        (payload) and ``host_sync_wall_s`` (time spent blocked). Every
+        result-consuming path routes through here, so the counters ARE
+        the sync budget the transfer-guard test pins."""
+        t0 = time.perf_counter()
+        host = jax.device_get(tree)
+        self.stats.host_syncs += 1
+        self.stats.host_sync_wall_s += time.perf_counter() - t0
+        self.stats.host_bytes_transferred += int(sum(
+            getattr(leaf, "nbytes", 0)
+            for leaf in jax.tree_util.tree_leaves(host)))
+        return host
+
+    def _fetch_tree(self, rec: "_LaunchRecord"):
+        """The subset of a launch's outputs its apply step actually
+        reads on host. Tier-0 revalidation never looks at the rebased
+        ``S*``/``S̄`` planes host-side (hit carries stay pooled on
+        device), so skipping them keeps the biggest leaves out of every
+        warm fetch. Swarm and mesh launches fetch everything."""
+        if rec.kind != "reval" or self.mesh is not None:
+            return rec.outs
+        keys = (("mapping", "ok", "f_carry", "prune_sweeps")
+                if rec.tier == 0 else
+                ("mapping", "ok_rebase", "fitness", "S_star", "S_bar",
+                 "prune_sweeps"))
+        return {k: rec.outs[k] for k in keys}
+
+    @staticmethod
+    def _carry_tuple(carry) -> tuple:
+        """A stored carry as its ``(S*, f*, S̄)`` tuple: device-pool
+        handles and lazy result views are materialized (lazy device
+        slices, no host sync); plain tuples pass through."""
+        if isinstance(carry, (_CarryHandle, _LazyCarry)):
+            return carry.materialize()
+        return carry
+
+    def _stack_carries(self, carries: List) -> tuple:
+        """Stacked ``(B, ...)`` carry inputs for one launch, device-side.
+
+        All-handle same-shape batches (the warm steady state) take the
+        pool's one-``jnp.take``-per-part gather; mixed batches (cold
+        priors, rebased seeds, pad fillers) fall back to a device-side
+        ``jnp.stack`` of the materialized parts. Either way the result
+        is freshly allocated — safe to donate — and nothing round-trips
+        through the host.
+
+        Mesh services and the ``pipelined=False`` arm instead keep the
+        legacy host staging this PR replaced: each carry part is pulled
+        to host with a blocking ``np.asarray`` and re-stacked with
+        numpy. Those implicit device→host transfers are what the
+        pipeline eliminates, so they are charged to the host-sync
+        census here (one sync per device-resident part)."""
+        if self.mesh is not None or not self.pipelined:
+            mats = [self._carry_tuple(c) for c in carries]
+            stacked = []
+            for i in range(3):
+                parts = []
+                for mat in mats:
+                    p = mat[i]
+                    if isinstance(p, jax.Array):
+                        t0 = time.perf_counter()
+                        p = np.asarray(p)
+                        self.stats.host_syncs += 1
+                        self.stats.host_sync_wall_s += \
+                            time.perf_counter() - t0
+                        self.stats.host_bytes_transferred += int(p.nbytes)
+                    parts.append(np.asarray(p))
+                stacked.append(np.stack(parts))
+            return tuple(stacked)
+        if all(isinstance(c, _CarryHandle) for c in carries) and \
+                len({c.shape for c in carries}) == 1:
+            return self._pool.gather(carries)
+        mats = [self._carry_tuple(c) for c in carries]
+        return tuple(jnp.stack([jnp.asarray(m[i], jnp.float32)
+                                for m in mats])
+                     for i in range(3))
+
+    def _donate_argnums(self, kind: str) -> Tuple[int, ...]:
+        """Argnums a fresh jit build of ``kind`` may donate (empty when
+        ``donate_buffers`` is off or the kind's inputs can alias stored
+        state — see ``kernels.backend.SERVICE_DONATABLE_ARGNUMS``)."""
+        if not self.donate_buffers:
+            return ()
+        return kernel_backend.donate_argnums_for(kind)
+
     def match(self, query: Graph, target: Graph,
               key: Optional[jax.Array] = None,
               workload_key=None,
@@ -959,6 +1408,8 @@ class MatcherService:
         if carry0 is None:
             carry0 = seed if seed is not None \
                 else pso.default_carry(jnp.asarray(maskp))
+        else:
+            carry0 = self._carry_tuple(carry0)
 
         if self.mesh is None:
             outs = fn(key, Qp, Gp, maskp, carry0)
@@ -968,10 +1419,14 @@ class MatcherService:
             keys = jax.random.split(key, num_shards)
             outs = fn(keys, Qp, Gp, maskp, carry0)
 
-        base = collect_result(outs, order=order, crop=(n, m))
+        # the controller state stays device-resident for the store; the
+        # result itself resolves through ONE counted blocking fetch
+        dev_carry = (outs["S_star"], outs["f_star"], outs["S_bar"])
+        base = collect_result(self._sync_fetch(outs), order=order,
+                              crop=(n, m))
         res = ServiceMatchResult(**{f.name: getattr(base, f.name)
                                     for f in dataclasses.fields(MatchResult)})
-        self._store_result_carries(req, warm_key, res)
+        self._store_result_carries(req, warm_key, res, dev_carry=dev_carry)
         self.stats.epochs_run += res.epochs_run
         self._note_prune(1, res.prune_sweeps)
         if res.found:
@@ -1022,14 +1477,28 @@ class MatcherService:
         submission order; each request's ``latency_s`` is the wall time
         of the launches that actually served it, so an easy request no
         longer pays a hard neighbour's epochs.
+
+        With ``pipelined=True`` (the default) each tier dispatches its
+        launches for EVERY bucket group before anything blocks: the host
+        builds and enqueues group B's batch while the device still runs
+        group A's, and each stage resolves through one batched fetch —
+        an all-warm drain costs exactly one blocking host sync
+        (``stats.host_syncs_per_drain``). ``pipelined=False`` restores
+        the legacy serial walk: carries staged through host numpy (one
+        implicit sync per device-resident carry part) and one blocking
+        fetch per launch.
         """
         pending, self._pending = self._pending, []
         if not pending:
             return []
+        self.stats.drains += 1
         results: List[Optional[ServiceMatchResult]] = [None] * len(pending)
         groups: "OrderedDict[Tuple[int, int], List[int]]" = OrderedDict()
         for i, req in enumerate(pending):
             groups.setdefault(req.bucket, []).append(i)
+        if self._tiers_active() and self.pipelined:
+            self._drain_pipelined(pending, groups, results)
+            return results  # type: ignore[return-value]
         max_chunk = self.batch_classes[-1]
         for bucket, idxs in groups.items():
             reqs = [pending[i] for i in idxs]
@@ -1117,6 +1586,82 @@ class MatcherService:
             it.result.latency_s = it.latency_s
             results[it.ticket] = it.result
 
+    def _drain_pipelined(self, pending: List[_PendingRequest],
+                         groups: "OrderedDict[Tuple[int, int], List[int]]",
+                         results: List) -> None:
+        """Async-dispatch drain: every bucket group's launches for one
+        tier go out before ANY of them blocks, then the whole stage
+        resolves through a single batched fetch (``_apply_all``).
+
+        Host-side tier decisions for later groups (padding, carry
+        gathers, store probes) overlap device execution of earlier
+        groups' launches, and the per-stage sync count is 1 instead of
+        one per launch. Results and stored carries are bitwise identical
+        to the serial walk: store keys embed the bucket, so groups never
+        interact, and within a group the tier order and miss order are
+        preserved exactly."""
+        max_chunk = self.batch_classes[-1]
+        # ---- Tier 0: dispatch every group's revalidation launches ----
+        recs: List[_LaunchRecord] = []
+        state = []                 # (bucket, items, residual) per group
+        for bucket, idxs in groups.items():
+            items = self._intake([pending[i] for i in idxs], idxs)
+            residual = [it for it in items if it.carry is None]
+            cand = [it for it in items if it.carry is not None]
+            for pos in range(0, len(cand), max_chunk):
+                chunk = cand[pos:pos + max_chunk]
+                recs.append(self._dispatch_revalidate(
+                    bucket, chunk, [it.carry for it in chunk], tier=0,
+                    miss_sink=residual))
+            state.append((bucket, items, residual))
+        self._apply_all(recs)
+
+        # ---- Tier 1: rebase lookups + dispatches across all groups ----
+        recs = []
+        for bucket, items, residual in state:
+            if not (self.similarity and residual):
+                continue
+            t1_items, t1_carries = [], []
+            for it in residual:
+                nb = self._lookup_neighbor(it)
+                if nb is not None:
+                    t1_items.append(it)
+                    t1_carries.append(nb)
+            for pos in range(0, len(t1_items), max_chunk):
+                recs.append(self._dispatch_revalidate(
+                    bucket, t1_items[pos:pos + max_chunk],
+                    t1_carries[pos:pos + max_chunk], tier=1,
+                    miss_sink=[]))
+        self._apply_all(recs)
+
+        # ---- Tier 2: swarm the residual of every group ----
+        recs = []
+        for bucket, items, _ in state:
+            residual = [it for it in items if it.result is None]
+            for pos in range(0, len(residual), max_chunk):
+                recs.append(self._dispatch_swarm(
+                    bucket, residual[pos:pos + max_chunk]))
+        self._apply_all(recs)
+
+        for _, items, _ in state:
+            for it in items:
+                it.result.latency_s = it.latency_s
+                results[it.ticket] = it.result
+
+    def _apply_all(self, recs: List[_LaunchRecord]) -> None:
+        """Resolve one pipeline stage: ONE blocking fetch covering every
+        dispatched launch's outputs, then the per-launch applies in
+        dispatch order (which preserves the serial walk's store/miss
+        ordering)."""
+        if not recs:
+            return
+        hosts = self._sync_fetch([self._fetch_tree(rec) for rec in recs])
+        for rec, host in zip(recs, hosts):
+            if rec.kind == "reval":
+                self._apply_revalidate(rec, host)
+            else:
+                self._apply_swarm(rec, host)
+
     def _lookup_neighbor(self, item: _PipelineItem) -> Optional[tuple]:
         """Similarity-store probe for one Tier-0 miss; returns the carry
         of the nearest stored platform state, or None."""
@@ -1136,11 +1681,26 @@ class MatcherService:
     def _launch_revalidate(self, bucket, items: List[_PipelineItem],
                            carries: List[tuple], tier: int
                            ) -> List[_PipelineItem]:
-        """One Tier-0/1 launch: revalidate B carries in a single dispatch.
+        """One *serial* Tier-0/1 launch: dispatch, then a blocking fetch
+        of just this launch's outputs (one sync per launch — the arm
+        ``bench_pipeline`` measures the pipelined drain against).
 
         Hits get their result attached (0 epochs, revalidation cost);
         misses are returned for the next tier. Tier-1 misses keep the
         rebased carry (f* reset to -inf) as their Tier-2 swarm seed."""
+        misses: List[_PipelineItem] = []
+        rec = self._dispatch_revalidate(bucket, items, carries, tier,
+                                        miss_sink=misses)
+        self._apply_revalidate(rec, self._sync_fetch(self._fetch_tree(rec)))
+        return misses
+
+    def _dispatch_revalidate(self, bucket, items: List[_PipelineItem],
+                             carries: List[tuple], tier: int,
+                             miss_sink: List) -> _LaunchRecord:
+        """Enqueue one Tier-0/1 revalidation launch (no host sync): pad
+        the batch, stack the carries device-side, dispatch. The returned
+        record resolves via ``_apply_revalidate`` once its outputs are
+        fetched."""
         t0 = time.perf_counter()
         B = len(items)
         bclass = self._batch_class(B)
@@ -1151,6 +1711,7 @@ class MatcherService:
         compile_hit = self.stats.compile_cache_hits > hits_before
 
         reqs = [it.req for it in items]
+        stored = list(carries)
         padded, carries = list(reqs), list(carries)
         if bclass > B:
             pad_req, pad_carry = self._pad_slot(bucket, reqs[0], carries[0])
@@ -1159,49 +1720,85 @@ class MatcherService:
         Qb = np.stack([r.Qp for r in padded])
         Gb = np.stack([r.Gp for r in padded])
         maskb = np.stack([r.maskp for r in padded])
-        carry0 = tuple(np.stack([np.asarray(c[i]) for c in carries])
-                       for i in range(3))
+        carry0 = self._stack_carries(carries)
+        if self.mesh is None and self._donate_argnums("reval"):
+            self.stats.donated_launches += 1
 
         outs = fn(Qb, Gb, maskb, carry0)
+        tstats.launches += 1
+        tstats.checked += B
+        return _LaunchRecord(kind="reval", bucket=bucket, items=items,
+                             tier=tier, B=B, bclass=bclass,
+                             compile_hit=compile_hit, outs=outs,
+                             carries=stored, miss_sink=miss_sink, t0=t0)
+
+    def _apply_revalidate(self, rec: _LaunchRecord, host: dict) -> None:
+        """Consume one fetched revalidation launch: attach hit results,
+        append misses to the record's sink (with their Tier-2 seeds),
+        refresh stores. All array reads come from ``host`` or stay on
+        device — this path never blocks."""
+        tier, B, items = rec.tier, rec.B, rec.items
+        bucket, carries = rec.bucket, rec.carries
+        tstats = self.stats.tier0 if tier == 0 else self.stats.tier1
         # Tier 0 re-validates this problem's own carry (carried-f* gate);
         # Tier 1 additionally requires the rebased projection to clear the
         # fitness bound on THIS problem (stored f* isn't transferable)
-        ok = np.asarray(outs["ok" if tier == 0 else "ok_rebase"])
-        maps = np.asarray(outs["mapping"])
-        fits = np.asarray(outs["fitness"])
-        S_rb = np.asarray(outs["S_star"])
-        S_bar_rb = np.asarray(outs["S_bar"])
-        sweeps = np.asarray(outs["prune_sweeps"]).reshape(-1)
+        ok = np.asarray(host["ok" if tier == 0 else "ok_rebase"])
+        maps = np.asarray(host["mapping"])
+        # leaves outside this tier's _fetch_tree subset stay on device
+        fits = host.get("fitness")
+        S_rb = host.get("S_star")
+        S_bar_rb = host.get("S_bar")
+        f_carry = host.get("f_carry")
+        sweeps = np.asarray(host["prune_sweeps"]).reshape(-1)
         self._note_prune(B, int(sweeps[:B].sum()))
+        on_device = self.mesh is None
         done = time.perf_counter()
 
-        tstats.launches += 1
-        tstats.checked += B
-        tstats.wall_s += done - t0
-        misses: List[_PipelineItem] = []
+        tstats.wall_s += done - rec.t0
         for j, it in enumerate(items):
             it.latency_s = done - it.t0
             if not ok[j]:
                 if tier == 1:
-                    it.seed = (S_rb[j], np.float32(-np.inf), S_bar_rb[j])
-                misses.append(it)
+                    # rebased controller state seeds the Tier-2 swarm;
+                    # keep it device-resident (slices of the launch
+                    # outputs) so the swarm stack never touches host
+                    if on_device:
+                        it.seed = (rec.outs["S_star"][j],
+                                   np.float32(-np.inf),
+                                   rec.outs["S_bar"][j])
+                    else:
+                        it.seed = (S_rb[j], np.float32(-np.inf),
+                                   S_bar_rb[j])
+                rec.miss_sink.append(it)
                 continue
             tstats.hits += 1
             self.stats.carry_fastpath_hits += 1
             self.stats.found += 1
             if tier == 0:
-                carry, f_res = carries[j], float(np.asarray(carries[j][1]))
+                # the stored carry revalidated: it stays in the store
+                # untouched; its f* comes from the output echo, not a
+                # per-item device read, and the result's carry is a lazy
+                # view — no pool slicing unless the caller looks at it
+                carry = (_LazyCarry(carries[j])
+                         if isinstance(carries[j], _CarryHandle)
+                         else self._carry_tuple(carries[j]))
+                f_res = float(f_carry[j])
             else:
                 carry = (S_rb[j], fits[j], S_bar_rb[j])
                 f_res = float(fits[j])
-                self._put_carry(it.warm_key, carry)
-                if self.warm_start and it.req.engine_sig is not None:
-                    self._carries.put_similar(it.req.qdigest, bucket,
-                                              it.req.engine_sig, carry)
+                if self.warm_start:
+                    stored = self._pool.put(
+                        (rec.outs["S_star"][j], rec.outs["fitness"][j],
+                         rec.outs["S_bar"][j])) if on_device else carry
+                    self._put_carry(it.warm_key, stored)
+                    if it.req.engine_sig is not None:
+                        self._carries.put_similar(it.req.qdigest, bucket,
+                                                  it.req.engine_sig,
+                                                  stored)
             it.result = self._revalidated_result(
                 it, maps[j], f_res, carry, tier=tier, batch=B,
-                compile_hit=compile_hit, prune_sweeps=int(sweeps[j]))
-        return misses
+                compile_hit=rec.compile_hit, prune_sweeps=int(sweeps[j]))
 
     def _revalidated_result(self, item: _PipelineItem, M_c: np.ndarray,
                             f_res: float, carry, *, tier: int, batch: int,
@@ -1253,7 +1850,14 @@ class MatcherService:
         S_id[idx, idx] = 1.0
         # f* = +inf clears ANY early_exit_fitness bound, so the pad slot
         # is pre-finished regardless of the configured threshold
-        carry = (S_id, np.float32(np.inf), S_id.copy())
+        if self.mesh is None:
+            carry = self._pad_handles.get(bucket)
+            if carry is None:
+                carry = self._pool.put((S_id, np.float32(np.inf), S_id))
+                carry.retain()     # pinned: pads recur on every drain
+                self._pad_handles[bucket] = carry
+        else:
+            carry = (S_id, np.float32(np.inf), S_id.copy())
         req = _PendingRequest(key=like.key, workload_key=None,
                               order=np.arange(n_pad),
                               crop=(n_pad, m_pad), bucket=bucket,
@@ -1261,9 +1865,17 @@ class MatcherService:
         return req, carry
 
     def _launch_swarm(self, bucket, items: List[_PipelineItem]) -> None:
-        """One Tier-2 swarm launch over the pipeline's residual items
-        (carries already resolved: failed exact carry, rebased neighbour
-        seed, or the cold prior)."""
+        """One *serial* Tier-2 swarm launch over the pipeline's residual
+        items: dispatch, then a blocking fetch of just this launch's
+        outputs (the one-sync-per-launch baseline arm)."""
+        rec = self._dispatch_swarm(bucket, items)
+        self._apply_swarm(rec, self._sync_fetch(rec.outs))
+
+    def _dispatch_swarm(self, bucket, items: List[_PipelineItem]
+                        ) -> _LaunchRecord:
+        """Enqueue one Tier-2 swarm launch (no host sync) over items
+        whose carries are already resolved: failed exact carry, rebased
+        neighbour seed, or the cold prior."""
         t0 = time.perf_counter()
         B = len(items)
         bclass = self._batch_class(B)
@@ -1291,20 +1903,20 @@ class MatcherService:
             if pad_req is not reqs[0] and self.cfg.early_exit \
                     and self.cfg.carry_fastpath:
                 self.stats.pad_slots_frozen += pad
-        keysb = np.stack([np.asarray(r.key) for r in padded])
+        if self.mesh is None:
+            # PRNG keys are device arrays: stack them device-side instead
+            # of round-tripping each through np.asarray (a hidden sync)
+            keysb = jnp.stack([jnp.asarray(r.key) for r in padded])
+        else:
+            keysb = np.stack([np.asarray(r.key) for r in padded])
         Qb = np.stack([r.Qp for r in padded])
         Gb = np.stack([r.Gp for r in padded])
         maskb = np.stack([r.maskp for r in padded])
-        carry0 = tuple(np.stack([np.asarray(c[i]) for c in carries])
-                       for i in range(3))
+        carry0 = self._stack_carries(carries)
+        if self.mesh is None and self._donate_argnums("batch"):
+            self.stats.donated_launches += 1
 
         outs = fn(keysb, Qb, Gb, maskb, carry0)
-        batch_results = collect_batch_results(
-            outs, bclass,
-            orders=[r.order for r in padded],
-            crops=[r.crop for r in padded])
-        done = time.perf_counter()
-
         self.stats.batch_launches += 1
         self.stats.batch_problems += B
         self.stats.batch_slots += bclass
@@ -1313,13 +1925,33 @@ class MatcherService:
         self.stats.epoch_finish_launches += 1
         self.stats.epoch_finish_problems += B
         self.stats.tier2.checked += B
-        self.stats.tier2.wall_s += done - t0
+        return _LaunchRecord(kind="swarm", bucket=bucket, items=items,
+                             tier=2, B=B, bclass=bclass,
+                             compile_hit=compile_hit, outs=outs,
+                             padded=padded, t0=t0)
+
+    def _apply_swarm(self, rec: _LaunchRecord, host: dict) -> None:
+        """Consume one fetched swarm launch: build per-item results from
+        the host outputs, store the still-on-device controller state for
+        future warm starts."""
+        items, B, padded = rec.items, rec.B, rec.padded
+        batch_results = collect_batch_results(
+            host, rec.bclass,
+            orders=[r.order for r in padded],
+            crops=[r.crop for r in padded])
+        done = time.perf_counter()
+        on_device = self.mesh is None
+
+        self.stats.tier2.wall_s += done - rec.t0
         for j, it in enumerate(items):
             base = batch_results[j]
             res = ServiceMatchResult(
                 **{f.name: getattr(base, f.name)
                    for f in dataclasses.fields(MatchResult)})
-            self._store_result_carries(it.req, it.warm_key, res)
+            dev_carry = (rec.outs["S_star"][j], rec.outs["f_star"][j],
+                         rec.outs["S_bar"][j]) if on_device else None
+            self._store_result_carries(it.req, it.warm_key, res,
+                                       dev_carry=dev_carry)
             self.stats.epochs_run += res.epochs_run
             self._note_prune(1, res.prune_sweeps)
             if res.found:
@@ -1327,8 +1959,8 @@ class MatcherService:
                 self.stats.tier2.hits += 1
             if res.carry_verified:
                 self.stats.carry_fastpath_hits += 1
-            res.bucket = bucket
-            res.compile_cache_hit = compile_hit
+            res.bucket = rec.bucket
+            res.compile_cache_hit = rec.compile_hit
             res.warm_hit = it.warm_hit
             res.batch_size = B
             res.coalesced = B > 1
@@ -1411,6 +2043,15 @@ class MatcherService:
             "fe_drain_flush": s.fe_drain_flush,
             "fe_queue_peak": s.fe_queue_peak,
             "fe_wait_s": s.fe_wait_s,
+            "drains": s.drains,
+            "host_syncs": s.host_syncs,
+            "host_syncs_per_drain": s.host_syncs_per_drain,
+            "host_bytes_transferred": s.host_bytes_transferred,
+            "host_sync_wall_s": s.host_sync_wall_s,
+            "donated_launches": s.donated_launches,
+            "pool_puts": self._pool.puts,
+            "pool_gathers": self._pool.gathers,
+            "pool_live_rows": self._pool.live_rows,
         }
         for name in ("tier0", "tier1", "tier2"):
             t: TierStats = getattr(s, name)

@@ -76,6 +76,27 @@ ENV_VAR = "REPRO_KERNEL_BACKEND"
 #: Dispatch tags the padding/dispatch layer (kernels/ops.py) understands.
 _OPS_TAGS = ("ref", "pallas", "interpret", "auto")
 
+#: Buffer-donation metadata for the service's executable calling
+#: conventions, keyed by executable kind (see
+#: ``MatcherService._resolve_executable``). The value is the argnums of
+#: the stacked warm-carry pytree that is safe to donate: the batched
+#: kinds receive freshly gathered/stacked carry arrays that nothing else
+#: references, so XLA may update particle/controller state in place
+#: (halving peak carry memory per launch). The single-problem ``match``
+#: kind donates nothing — its carry input can alias a stored CarryStore
+#: entry, and donating it would invalidate the store.
+SERVICE_DONATABLE_ARGNUMS: Dict[str, Tuple[int, ...]] = {
+    "match": (),            # fn(key,  Q,  G,  mask,  carry0)
+    "batch": (4,),          # fn(keys, Qb, Gb, maskb, carry0)
+    "reval": (3,),          # fn(Qb, Gb, maskb, carry0)
+}
+
+
+def donate_argnums_for(kind: str) -> Tuple[int, ...]:
+    """Donatable argnums for one service-executable kind (empty tuple
+    for unknown kinds — unknown calling conventions never donate)."""
+    return SERVICE_DONATABLE_ARGNUMS.get(kind, ())
+
 
 class KernelBackend:
     """One kernel suite: every matcher kernel behind a uniform surface.
