@@ -42,9 +42,9 @@ import jax
 from repro.accel import EDGE
 from repro.core import graphs, pso
 from repro.core.service import AsyncServiceFrontEnd, MatcherService
-from repro.sched import (SimConfig, Simulator, get_scheduler,
-                         make_burst_scenario, make_scenario,
-                         make_streaming_scenario)
+from repro.sched import (SimConfig, Simulator, build_scenario,
+                         get_scheduler, make_burst_scenario,
+                         make_scenario, make_streaming_scenario)
 from repro.sched.metrics import frontend_stats
 
 
@@ -202,6 +202,34 @@ def bench_equivalence(scheduler_names=("immsched", "prema")):
             "bitwise_legacy_equal": all(c["equal"] for c in checks)}
 
 
+def bench_registry_equivalence():
+    """Preset ≡ explicit registry spec: the scenarios every arm above
+    runs are built through ``build_scenario``, and an explicit spec with
+    the same knobs reproduces the preset's tasks byte-for-byte."""
+    preset = make_scenario("simple", rate_hz=40, horizon=1.0, seed=5)
+    explicit = build_scenario({
+        "name": "simple-poisson", "seed": 5, "horizon": 1.0,
+        "streams": [{
+            "arrival": {"kind": "poisson", "rate_hz": 40},
+            "workload": {"kind": "uniform", "complexity": "simple"},
+            "urgency": {"kind": "bernoulli", "urgent_frac": 0.4},
+            "deadline": {"kind": "slack", "deadline_slack": 2.0,
+                         "urgent_slack": 1.25,
+                         "base_exec_estimate": 5e-3},
+        }],
+    })
+    def rec(t):
+        return (t.task_id, t.name, t.workload.name, t.arrival.hex(),
+                t.deadline.hex(), t.priority, t.urgent)
+
+    equal = (preset.name == explicit.name
+             and len(preset.tasks) == len(explicit.tasks)
+             and all(rec(a) == rec(b)
+                     for a, b in zip(preset.tasks, explicit.tasks)))
+    return {"preset_tasks": len(preset.tasks),
+            "preset_spec_equal": equal}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arrivals", type=int, default=1_000_000,
@@ -230,6 +258,7 @@ def main() -> None:
                              multipliers, args.scheduler)
     frontend = bench_frontend(fe_cfg, fe_requests)
     equiv = bench_equivalence()
+    registry = bench_registry_equivalence()
 
     result = {
         "smoke": bool(args.smoke),
@@ -238,8 +267,10 @@ def main() -> None:
         "load_sweep": sweep,
         "frontend": frontend,
         "equivalence": equiv,
+        "registry": registry,
         "pass": (headline["pass"] and sweep["pass"] and frontend["pass"]
-                 and equiv["bitwise_legacy_equal"]),
+                 and equiv["bitwise_legacy_equal"]
+                 and registry["preset_spec_equal"]),
     }
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
@@ -268,6 +299,9 @@ def main() -> None:
           f"deadline={fes['fe_drain_deadline']}"
           f"_batch={fes['fe_drain_batch_full']}"
           f"_flush={fes['fe_drain_flush']}_shed={fes['fe_shed']}")
+    print(f"scale_registry_preset_equal,"
+          f"{int(registry['preset_spec_equal'])},"
+          f"tasks={registry['preset_tasks']}")
     ok = result["pass"]
     print(f"scale_acceptance,0,{'PASS' if ok else 'FAIL'}")
     if not ok:

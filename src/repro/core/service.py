@@ -1213,6 +1213,62 @@ class MatcherService:
         self.stats.restored_sim_entries += n_sim
         return extras.get("extra", {})
 
+    def verify_snapshot_roundtrip(self, step: Optional[int] = None
+                                  ) -> bool:
+        """Save a snapshot, restore it into a FRESH twin service, and
+        bitwise-compare the warm state — the mid-run round-trip probe
+        the invariant fuzzer leans on.
+
+        The twin is built with this service's config (same
+        ``config_digest``, so the restore is accepted) but no AOT cache
+        (snapshots only; nothing is compiled). Compared: both carry
+        stores' key sequences in LRU order, every carry leaf
+        (``dtype``/``shape``/bytes — via :meth:`_carry_tuple`, so
+        device-pool handles materialize identically on both sides) and
+        the prune-sweep calibration counters. Raises ``AssertionError``
+        naming the first divergence; returns True when the round trip
+        is bitwise clean. Requires ``persist_dir``."""
+        step = self.save_snapshot(step=step)
+        twin = MatcherService(
+            self.cfg, mesh=self.mesh, axis_names=self.axis_names,
+            cache_capacity=self.cache_capacity,
+            warm_capacity=self._carries.capacity,
+            warm_start=self.warm_start, n_multiple=self.n_multiple,
+            m_multiple=self.m_multiple,
+            batch_classes=self.batch_classes, tiered=self.tiered,
+            similarity=self.similarity,
+            sim_capacity=self._carries.sim_capacity,
+            sim_index=self._carries.sim_index,
+            pipelined=self.pipelined,
+            donate_buffers=self.donate_buffers,
+            persist_dir=self.persist_dir, aot_cache=False)
+        restored = twin.restore_snapshot(step=step)
+        assert restored is not None, \
+            "snapshot round trip: restore rejected its own snapshot"
+
+        def _leaves(svc):
+            exact, sim = svc._carries.export_state()
+            return ([(k, svc._carry_tuple(c)) for k, c in exact],
+                    [(k, svc._carry_tuple(c)) for k, c in sim])
+
+        for store, mine, theirs in zip(("exact", "sim"), _leaves(self),
+                                       _leaves(twin)):
+            assert [k for k, _ in mine] == [k for k, _ in theirs], \
+                f"snapshot round trip: {store} store keys diverged"
+            for (key, a), (_, b) in zip(mine, theirs):
+                a, b = [tuple(np.asarray(x) for x in c) for c in (a, b)]
+                assert len(a) == len(b), \
+                    f"snapshot round trip: carry arity for {key!r}"
+                for x, y in zip(a, b):
+                    assert x.dtype == y.dtype and x.shape == y.shape \
+                        and x.tobytes() == y.tobytes(), \
+                        f"snapshot round trip: {store} carry for " \
+                        f"{key!r} not bitwise equal"
+        assert (twin.stats.prune_problems, twin.stats.prune_sweeps) == \
+            (self.stats.prune_problems, self.stats.prune_sweeps), \
+            "snapshot round trip: calibration counters diverged"
+        return True
+
     # -- matching ----------------------------------------------------------
 
     def _prepare(self, query: Graph, target: Graph, key, workload_key,

@@ -1,7 +1,10 @@
 from repro.sched.tasks import (TaskSpec, Scenario, StreamScenario,
                                make_burst_scenario,
-                               make_mixed_burst_scenario, make_scenario,
+                               make_mixed_burst_scenario,
+                               make_restart_scenario, make_scenario,
                                make_streaming_scenario)
+from repro.sched.registry import (ARRIVALS, DEADLINES, RESTARTS, URGENCY,
+                                  WORKLOADS, build_scenario)
 from repro.sched.simulator import (Simulator, SimConfig, SimResult,
                                    TaskTable)
 from repro.sched.schedulers import (SCHEDULERS, IMMSchedScheduler,

@@ -71,6 +71,21 @@ class SchedulerBase:
         """Online matcher-service counters; {} for schedulers without one."""
         return {}
 
+    def check_invariants(self, result) -> None:
+        """End-of-run cross-checks, called by the simulator on the
+        finished :class:`SimResult` when ``SimConfig.validate`` is set.
+
+        Base check: no registered scheduler ever double-books an engine
+        (``alloc_conflicts == 0``) — the simulator counts conflicts
+        rather than crashing so hostile test schedulers can probe the
+        counter, but every real policy must stay clean. Subclasses add
+        their own accounting invariants on top (IMMSched: per-tier
+        decision counts sum to matcher decisions). Raises
+        ``AssertionError`` on violation."""
+        assert result.alloc_conflicts == 0, \
+            f"{self.name}: {result.alloc_conflicts} engine " \
+            "double-bookings in a conflict-free scheduler"
+
     def on_restart(self, sim, now: float) -> None:
         """Scheduler-process kill/restart at ``now`` (simulator event).
 
@@ -196,6 +211,10 @@ class IMMSchedScheduler(SchedulerBase):
     def reset(self, sim):
         super().reset(sim)
         self._tier_decisions = {"tier0": 0, "tier1": 0, "tier2": 0}
+        # every task routed through the tier predictor (normal bursts +
+        # urgent interrupts); check_invariants pins the per-tier split
+        # to this total
+        self._matcher_decisions = 0
         self._restart_stats = {"restored_carries": 0,
                                "restored_sim_entries": 0,
                                "restored_posterior_buckets": 0,
@@ -292,6 +311,8 @@ class IMMSchedScheduler(SchedulerBase):
         d = self._service.stats_dict() if self._service else {}
         for k, v in getattr(self, "_tier_decisions", {}).items():
             d[f"sched_{k}_decisions"] = v
+        d["sched_matcher_decisions"] = getattr(
+            self, "_matcher_decisions", 0)
         obs = getattr(self, "_tier1_obs", {})
         d["sched_tier1_calib_hits"] = sum(v[0] for v in obs.values())
         d["sched_tier1_calib_trials"] = sum(v[1] for v in obs.values())
@@ -301,6 +322,25 @@ class IMMSchedScheduler(SchedulerBase):
         for k, v in getattr(self, "_restart_stats", {}).items():
             d[f"restart_{k}"] = v
         return d
+
+    def check_invariants(self, result) -> None:
+        """Tier-accounting cross-checks on top of the base conflict
+        check: every task routed through the tier predictor landed in
+        exactly one tier (``sched_tier{0,1,2}_decisions`` sum to
+        ``sched_matcher_decisions``) and the Tier-1 calibration never
+        records more successes than trials. Runs on every
+        ``SimConfig.validate`` simulation, analytic or real."""
+        super().check_invariants(result)
+        ms = result.matcher_stats
+        tiers = sum(ms.get(f"sched_tier{i}_decisions", 0)
+                    for i in range(3))
+        charged = ms.get("sched_matcher_decisions", 0)
+        assert tiers == charged, \
+            f"per-tier decisions ({tiers}) != tasks routed through " \
+            f"the tier predictor ({charged})"
+        assert ms.get("sched_tier1_calib_hits", 0) <= \
+            ms.get("sched_tier1_calib_trials", 0), "calibration hits " \
+            "exceed trials"
 
     # -- warm-state predictor (mirrors the service carry store) ----------
 
@@ -406,6 +446,7 @@ class IMMSchedScheduler(SchedulerBase):
         pipeline skips Tier 0/1 when nothing is stored), so it is charged
         prune + swarm alone."""
         m = sim.platform.engines
+        self._matcher_decisions += len(normal)
         tiers = {t.spec.task_id: self._predict_tier(t.spec.name, sig)
                  for t in normal}
         warm = [t for t in normal if tiers[t.spec.task_id] < 2]
@@ -467,6 +508,7 @@ class IMMSchedScheduler(SchedulerBase):
                 deadline=t.spec.deadline, live_bytes=t.live_bytes)
             for t in tasks if t.status == "running"]
         free = self._free_engines(sim, tasks)
+        self._matcher_decisions += len(urgent_list)
         preempted: set = set()
         grants = []          # (urgent, engines, freed_engines, need)
         preds = []           # (name, sig, predicted tier) per grant

@@ -426,7 +426,7 @@ class Simulator:
                            kind="stable")
         lat = np.asarray(fin_lat, dtype=np.float64)[order]
         st = np.asarray(fin_st, dtype=np.float64)[order]
-        return SimResult(
+        result = SimResult(
             scheduler=sched.name, platform=self.platform.name,
             finished=n_finished, total=admitted,
             deadline_met=deadline_met, urgent_total=urgent_total,
@@ -442,6 +442,8 @@ class Simulator:
             alloc_conflicts=self._alloc_conflicts,
             busy_integral=busy_integral, peak_live_tasks=peak_live,
             percentiles=_finish_percentiles(lat, st))
+        self._check_invariants(sched, result)
+        return result
 
     # ------------------------------------------------------------------
     def run_legacy(self, scenario: Scenario) -> SimResult:
@@ -554,7 +556,7 @@ class Simulator:
                          dtype=np.float64)
         st = np.asarray([t.sched_time for t in finished],
                         dtype=np.float64)
-        return SimResult(
+        result = SimResult(
             scheduler=sched.name, platform=self.platform.name,
             finished=len(finished), total=len(tasks),
             deadline_met=len(met), urgent_total=len(urgent),
@@ -570,6 +572,23 @@ class Simulator:
             alloc_conflicts=self._alloc_conflicts,
             busy_integral=busy_integral, peak_live_tasks=peak_live,
             percentiles=_finish_percentiles(lat, st))
+        self._check_invariants(sched, result)
+        return result
+
+    # ------------------------------------------------------------------
+    def _check_invariants(self, sched, result: SimResult) -> None:
+        """End-of-run scheduler cross-checks under ``cfg.validate``.
+
+        Dispatches to the scheduler's ``check_invariants(result)`` hook
+        (see :class:`~repro.sched.schedulers.SchedulerBase`) on the
+        finished result, from BOTH event loops — so heap and legacy
+        runs are held to identical accounting invariants. Schedulers
+        without the hook (ad-hoc test doubles) are skipped."""
+        if not self.cfg.validate:
+            return
+        check = getattr(sched, "check_invariants", None)
+        if check is not None:
+            check(result)
 
     # ------------------------------------------------------------------
     def _admit(self, spec: TaskSpec) -> TaskState:

@@ -12,7 +12,7 @@ from typing import Callable, Iterator, List, Optional, Sequence
 
 import numpy as np
 
-from repro.workloads import WorkloadGraph, workload_complexity_class
+from repro.workloads import WorkloadGraph
 
 
 @dataclasses.dataclass
@@ -42,8 +42,19 @@ class Scenario:
 
     def __post_init__(self):
         self.tasks.sort(key=lambda t: t.arrival)
+        tasks = []
         for i, t in enumerate(self.tasks):
-            t.task_id = i
+            if t.task_id not in (-1, i):
+                # re-materializing tasks that already belong to another
+                # scenario (registry specs, scenario surgery in tests):
+                # renumber a COPY so the donor scenario's ids survive —
+                # mutating foreign TaskSpecs here silently corrupted the
+                # donor's task table
+                t = dataclasses.replace(t, task_id=i)
+            else:
+                t.task_id = i
+            tasks.append(t)
+        self.tasks = tasks
         self.restarts = sorted(float(r) for r in self.restarts)
 
     def arrivals_iter(self) -> Iterator[TaskSpec]:
@@ -82,6 +93,43 @@ class StreamScenario:
         return self.arrivals_factory()
 
 
+def _poisson_stream_spec(complexity: str, *, rate_hz: float = 20.0,
+                         horizon: float = 2.0, urgent_frac: float = 0.4,
+                         deadline_slack: float = 2.0,
+                         urgent_slack: float = 1.25,
+                         base_exec_estimate: float = 5e-3,
+                         burst_size: int = 1, burst_frac: float = 0.0,
+                         seed: int = 0, stream: bool = False) -> dict:
+    """Registry spec for the canonical single-class Poisson stream.
+
+    The shared core of :func:`make_scenario`,
+    :func:`make_streaming_scenario` and :func:`make_restart_scenario`.
+    Non-bursty knobs select the plain ``poisson`` arrival process (no
+    burst coin draws), bursty knobs the compound ``burst`` one — the
+    same gating the historical loop applied, so the registry path draws
+    the RNG identically."""
+    bursty = burst_frac > 0.0 and burst_size > 1
+    arrival = ({"kind": "burst", "rate_hz": rate_hz,
+                "burst_size": burst_size, "burst_frac": burst_frac}
+               if bursty else {"kind": "poisson", "rate_hz": rate_hz})
+    name = (f"{complexity}-burst{burst_size}" if bursty
+            else f"{complexity}-poisson")
+    if stream:
+        name += "-stream"
+    return {
+        "name": name, "seed": seed, "horizon": horizon, "stream": stream,
+        "streams": [{
+            "arrival": arrival,
+            "workload": {"kind": "uniform", "complexity": complexity},
+            "urgency": {"kind": "bernoulli", "urgent_frac": urgent_frac},
+            "deadline": {"kind": "slack",
+                         "deadline_slack": deadline_slack,
+                         "urgent_slack": urgent_slack,
+                         "base_exec_estimate": base_exec_estimate},
+        }],
+    }
+
+
 def _poisson_task_stream(complexity: str, *, rate_hz: float,
                          horizon: float, urgent_frac: float,
                          deadline_slack: float, urgent_slack: float,
@@ -90,34 +138,21 @@ def _poisson_task_stream(complexity: str, *, rate_hz: float,
                          ) -> Iterator[TaskSpec]:
     """Generator behind :func:`make_scenario` / streaming scenarios.
 
-    Draws the RNG in exactly the order the historical list-building loop
-    did (inter-arrival gap, burst coin, then per-task workload/urgency
+    Backed by the scenario registry's composed pieces, which draw the
+    RNG in exactly the order the historical list-building loop did
+    (inter-arrival gap, burst coin, then per-task workload/urgency
     draws), so ``list(_poisson_task_stream(...))`` is byte-identical to
     the tasks of the materialized scenario with the same knobs — the
     property ``make_streaming_scenario`` relies on. Yields tasks with
     nondecreasing ``arrival``; ``task_id`` is left at -1 for the
     simulator to assign in arrival order."""
-    rng = np.random.default_rng(seed)
-    pool = workload_complexity_class(complexity)
-    bursty = burst_frac > 0.0 and burst_size > 1
-    t = 0.0
-    while True:
-        t += rng.exponential(1.0 / rate_hz)
-        if t >= horizon:
-            return
-        count = 1
-        if bursty and rng.random() < burst_frac:
-            count = int(burst_size)
-        for _ in range(count):
-            wl = pool[rng.integers(len(pool))]
-            urgent = bool(rng.random() < urgent_frac)
-            slack = urgent_slack if urgent else deadline_slack
-            nominal = base_exec_estimate * (wl.total_macs / 1e9 + 0.2)
-            yield TaskSpec(
-                name=wl.name, workload=wl, arrival=float(t),
-                priority=2 if urgent else 1,
-                deadline=float(t + slack * nominal + 1e-3),
-                urgent=urgent)
+    from repro.sched.registry import _generate
+    spec = _poisson_stream_spec(
+        complexity, rate_hz=rate_hz, horizon=horizon,
+        urgent_frac=urgent_frac, deadline_slack=deadline_slack,
+        urgent_slack=urgent_slack, base_exec_estimate=base_exec_estimate,
+        burst_size=burst_size, burst_frac=burst_frac, seed=seed)
+    return _generate(spec, np.random.default_rng(seed))
 
 
 def make_scenario(complexity: str, *, rate_hz: float = 20.0,
@@ -135,19 +170,17 @@ def make_scenario(complexity: str, *, rate_hz: float = 20.0,
     ``burst_size``/``burst_frac`` turn the stream compound-Poisson: with
     probability ``burst_frac`` an arrival event delivers ``burst_size``
     tasks at the SAME instant (multi-tenant request fan-in — the case the
-    coalescing matcher service batches into one launch). The defaults
-    (no bursts) draw exactly the legacy RNG stream, so existing scenarios
-    are byte-identical.
+    coalescing matcher service batches into one launch). A thin preset
+    over :func:`repro.sched.registry.build_scenario`; the registry path
+    draws exactly the legacy RNG stream, so scenarios are byte-identical
+    to historical output (golden-seed tested).
     """
-    tasks = list(_poisson_task_stream(
+    from repro.sched.registry import build_scenario
+    return build_scenario(_poisson_stream_spec(
         complexity, rate_hz=rate_hz, horizon=horizon,
         urgent_frac=urgent_frac, deadline_slack=deadline_slack,
         urgent_slack=urgent_slack, base_exec_estimate=base_exec_estimate,
         burst_size=burst_size, burst_frac=burst_frac, seed=seed))
-    bursty = burst_frac > 0.0 and burst_size > 1
-    name = (f"{complexity}-burst{burst_size}" if bursty
-            else f"{complexity}-poisson")
-    return Scenario(name=name, tasks=tasks, horizon=horizon)
 
 
 def make_streaming_scenario(complexity: str, *, rate_hz: float = 20.0,
@@ -165,23 +198,18 @@ def make_streaming_scenario(complexity: str, *, rate_hz: float = 20.0,
     TaskSpecs. ``make_streaming_scenario(...)`` replayed through the
     simulator is byte-identical to ``make_scenario(...)`` with the same
     arguments (tested in tests/test_scale.py)."""
+    from repro.sched.registry import build_scenario
     bursty = burst_frac > 0.0 and burst_size > 1
-    name = (f"{complexity}-burst{burst_size}-stream" if bursty
-            else f"{complexity}-poisson-stream")
-
-    def factory() -> Iterator[TaskSpec]:
-        return _poisson_task_stream(
-            complexity, rate_hz=rate_hz, horizon=horizon,
-            urgent_frac=urgent_frac, deadline_slack=deadline_slack,
-            urgent_slack=urgent_slack,
-            base_exec_estimate=base_exec_estimate,
-            burst_size=burst_size, burst_frac=burst_frac, seed=seed)
-
-    return StreamScenario(
-        name=name, horizon=horizon, arrivals_factory=factory,
-        expected_arrivals=int(rate_hz * horizon *
-                              (1 + (burst_size - 1) * burst_frac
-                               if bursty else 1)))
+    spec = _poisson_stream_spec(
+        complexity, rate_hz=rate_hz, horizon=horizon,
+        urgent_frac=urgent_frac, deadline_slack=deadline_slack,
+        urgent_slack=urgent_slack, base_exec_estimate=base_exec_estimate,
+        burst_size=burst_size, burst_frac=burst_frac, seed=seed,
+        stream=True)
+    spec["expected_arrivals"] = int(rate_hz * horizon *
+                                    (1 + (burst_size - 1) * burst_frac
+                                     if bursty else 1))
+    return build_scenario(spec)
 
 
 def make_burst_scenario(complexity: str, *, burst_size: int = 4,
@@ -221,45 +249,30 @@ def make_mixed_burst_scenario(easy: str = "simple", hard: str = "complex",
     drifted platform states — exact content-keyed warm carries miss and
     only Tier-1 similarity rebases keep the warm hit rate up.
     """
-    rng = np.random.default_rng(seed)
-    easy_pool = workload_complexity_class(easy)
-    hard_pool = workload_complexity_class(hard)
-    n_hard = max(int(round(hard_frac * burst_size)), 1) \
-        if hard_frac > 0 else 0
-    tasks: List[TaskSpec] = []
-
-    def add(wl, t, urgent):
-        slack = urgent_slack if urgent else deadline_slack
-        nominal = base_exec_estimate * (wl.total_macs / 1e9 + 0.2)
-        tasks.append(TaskSpec(
-            name=wl.name, workload=wl, arrival=float(t),
-            priority=2 if urgent else 1,
-            deadline=float(t + slack * nominal + 1e-3),
-            urgent=urgent))
-
-    t = 0.0
-    while True:
-        t += rng.exponential(1.0 / rate_hz)
-        if t >= horizon:
-            break
-        if rng.random() < burst_frac:
-            kinds = [True] * n_hard + [False] * (burst_size - n_hard)
-            for is_hard in kinds:
-                pool = hard_pool if is_hard else easy_pool
-                add(pool[rng.integers(len(pool))], t, urgent=False)
-        else:
-            add(easy_pool[rng.integers(len(easy_pool))], t, urgent=False)
-
+    from repro.sched.registry import build_scenario
+    deadline = {"kind": "slack", "deadline_slack": deadline_slack,
+                "urgent_slack": urgent_slack,
+                "base_exec_estimate": base_exec_estimate}
+    streams = [{
+        # the main phase always flips the burst coin (burst_frac may be
+        # 0) and never draws an urgency coin — tasks are background
+        "arrival": {"kind": "burst", "rate_hz": rate_hz,
+                    "burst_size": burst_size, "burst_frac": burst_frac},
+        "workload": {"kind": "mixed_burst", "easy": easy, "hard": hard,
+                     "hard_frac": hard_frac, "burst_size": burst_size},
+        "urgency": {"kind": "never"},
+        "deadline": deadline,
+    }]
     if churn_rate_hz > 0:
-        t = 0.0
-        while True:
-            t += rng.exponential(1.0 / churn_rate_hz)
-            if t >= horizon:
-                break
-            add(easy_pool[rng.integers(len(easy_pool))], t, urgent=True)
-
-    name = f"mixed-{easy}-{hard}-burst{burst_size}"
-    return Scenario(name=name, tasks=tasks, horizon=horizon)
+        streams.append({
+            "arrival": {"kind": "poisson", "rate_hz": churn_rate_hz},
+            "workload": {"kind": "uniform", "complexity": easy},
+            "urgency": {"kind": "always"},
+            "deadline": deadline,
+        })
+    return build_scenario({
+        "name": f"mixed-{easy}-{hard}-burst{burst_size}",
+        "seed": seed, "horizon": horizon, "streams": streams})
 
 
 def make_restart_scenario(complexity: str = "simple", *,
@@ -286,18 +299,14 @@ def make_restart_scenario(complexity: str = "simple", *,
 
     Extra ``kw`` pass through to :func:`make_scenario` (both phases).
     """
-    base = make_scenario(complexity, rate_hz=rate_hz,
-                         horizon=phase_horizon, urgent_frac=urgent_frac,
-                         burst_size=burst_size, burst_frac=burst_frac,
-                         seed=seed, **kw)
-    kill_at = phase_horizon + restart_gap
-    replay = [dataclasses.replace(
-        t, arrival=t.arrival + kill_at,
-        deadline=t.deadline + kill_at) for t in base.tasks]
-    return Scenario(name=f"{base.name}-restart",
-                    tasks=base.tasks + replay,
-                    horizon=2 * phase_horizon + restart_gap,
-                    restarts=[kill_at])
+    from repro.sched.registry import build_scenario
+    spec = _poisson_stream_spec(
+        complexity, rate_hz=rate_hz, horizon=phase_horizon,
+        urgent_frac=urgent_frac, burst_size=burst_size,
+        burst_frac=burst_frac, seed=seed, **kw)
+    spec["name"] += "-restart"
+    spec["restarts"] = {"kind": "replay", "gap": restart_gap}
+    return build_scenario(spec)
 
 
 def fixed_scenario(workloads: Sequence[WorkloadGraph], *,

@@ -5,8 +5,17 @@ package is installed (see requirements-dev.txt), otherwise a minimal
 deterministic fallback covering the subset these tests use:
 
   * ``st.integers(lo, hi)``  — uniform integer draws
+  * ``st.booleans()``        — fair coin
+  * ``st.floats(lo, hi)``    — uniform float draws
+  * ``st.sampled_from(seq)`` — uniform choice from a sequence
+  * ``st.lists(elem, ...)``  — lists of another strategy's draws
+  * ``st.just(value)``       — constant
   * ``st.randoms()``         — a seeded ``random.Random`` instance
+  * ``st.composite``         — ``fn(draw, ...)``-style composite
+    strategies (the scenario-spec fuzzer builds on this)
   * ``@settings(max_examples=N, deadline=...)`` — example-count control
+    (place ABOVE ``@given`` in the fallback; unknown keywords like
+    ``derandomize`` are accepted and ignored)
   * ``@given(*strategies)``  — runs the test once per seeded example
 
 The fallback is exhaustive-deterministic (fixed seed per example index),
@@ -36,9 +45,45 @@ except ImportError:
             return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
 
         @staticmethod
+        def booleans():
+            return _Strategy(lambda rnd: rnd.random() < 0.5)
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy(lambda rnd: rnd.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rnd: elements[rnd.randrange(len(elements))])
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=None, **_kw):
+            def draw(rnd):
+                hi = max_size if max_size is not None else min_size + 8
+                return [elements.draw(rnd)
+                        for _ in range(rnd.randint(min_size, hi))]
+            return _Strategy(draw)
+
+        @staticmethod
+        def just(value):
+            return _Strategy(lambda rnd: value)
+
+        @staticmethod
         def randoms(**_kw):
             return _Strategy(
                 lambda rnd: random.Random(rnd.randint(0, 2**31 - 1)))
+
+        @staticmethod
+        def composite(fn):
+            # mirrors hypothesis: `@st.composite def s(draw, *a)` makes
+            # `s(*a)` a strategy; the injected `draw` resolves nested
+            # strategies against the current example's RNG
+            def make(*args, **kw):
+                return _Strategy(
+                    lambda rnd: fn(lambda s: s.draw(rnd), *args, **kw))
+            return make
 
     st = _Strategies()
 

@@ -1,0 +1,285 @@
+"""Hypothesis-driven invariant fuzzing across the whole pipeline.
+
+Random scenario compositions — bursts × churn × restarts ×
+streaming-vs-materialized × scheduler choice — drawn through the
+scenario registry, with the cross-cutting invariants asserted on full
+simulator runs:
+
+  * no scheduler ever double-books an engine (``alloc_conflicts == 0``)
+    and every per-event ``SimConfig.validate`` check holds;
+  * IMMSched's per-tier decision counts sum to the tasks routed through
+    the tier predictor (``sched_matcher_decisions``);
+  * streaming and materialized scenarios built from the same spec
+    produce bitwise-equal ``SimResult``s;
+  * the heap event loop ≡ ``run_legacy`` bitwise, restarts included;
+  * the matcher service never serves an infeasible mapping, whatever
+    tier (warm fast path, similarity rebase, swarm) produced it;
+  * a snapshot saved mid-run restores bitwise into a fresh service.
+
+Everything here is ``fuzz``-marked and excluded from the default lane
+(pytest.ini ``addopts``); CI runs a seeded smoke with
+``REPRO_FUZZ_EXAMPLES=8 pytest -m fuzz``. Under real hypothesis the
+profile is derandomized (fixed corpus); the `_hyp_compat` fallback is
+deterministic by construction.
+"""
+import dataclasses
+import os
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from _hyp_compat import HAVE_HYPOTHESIS, given, settings, st
+from test_scenario_registry import _task_rec
+
+from repro.accel import EDGE
+from repro.accel.target_graph import free_engine_signature
+from repro.core import graphs, pso
+from repro.core.service import MatcherService
+from repro.sched.registry import build_scenario
+from repro.sched.schedulers import SCHEDULERS, get_scheduler
+from repro.sched.simulator import SimConfig, Simulator
+from repro.sched.tasks import Scenario
+
+jax.config.update("jax_platform_name", "cpu")
+
+pytestmark = pytest.mark.fuzz
+
+#: Examples per property; CI smoke pins REPRO_FUZZ_EXAMPLES=8 so the
+#: four scenario properties alone cover >= 25 random compositions.
+FUZZ_EXAMPLES = int(os.environ.get("REPRO_FUZZ_EXAMPLES", "10"))
+
+#: Small swarm so service launches stay sub-second on CPU.
+FUZZ_CFG = pso.PSOConfig(num_particles=16, epochs=2, inner_steps=6,
+                         early_exit=True)
+
+
+def fuzz_settings(n=None):
+    kw = dict(max_examples=n or FUZZ_EXAMPLES, deadline=None)
+    if HAVE_HYPOTHESIS:
+        kw["derandomize"] = True    # fixed CI corpus, no example DB
+    return settings(**kw)
+
+
+def _cfg(**kw):
+    return SimConfig(platform=EDGE, matcher_mode="analytic", **kw)
+
+
+# ---------------------------------------------------------------------------
+# spec strategies (drawn through the registry's public spec surface)
+# ---------------------------------------------------------------------------
+
+@st.composite
+def stream_specs(draw):
+    kind = draw(st.sampled_from(["poisson", "burst"]))
+    rate = float(draw(st.integers(10, 45)))
+    if kind == "poisson":
+        arrival = {"kind": "poisson", "rate_hz": rate}
+        burst_size = 4
+    else:
+        burst_size = draw(st.integers(2, 5))
+        arrival = {"kind": "burst", "rate_hz": rate,
+                   "burst_size": burst_size,
+                   "burst_frac": draw(st.floats(0.1, 0.9))}
+    wl = draw(st.sampled_from(["uniform", "mixed", "named"]))
+    if wl == "uniform":
+        workload = {"kind": "uniform",
+                    "complexity": draw(st.sampled_from(
+                        ["simple", "middle"]))}
+    elif wl == "mixed":
+        workload = {"kind": "mixed_burst", "easy": "simple",
+                    "hard": "middle",
+                    "hard_frac": draw(st.floats(0.0, 0.8)),
+                    "burst_size": burst_size}
+    else:
+        workload = {"kind": "named",
+                    "name": draw(st.sampled_from(
+                        ["mobilenetv2", "resnet50"]))}
+    urgency = draw(st.sampled_from([
+        {"kind": "never"}, {"kind": "always"},
+        {"kind": "bernoulli", "urgent_frac": 0.4}]))
+    deadline = draw(st.sampled_from([
+        {"kind": "slack"},
+        {"kind": "slack", "deadline_slack": 1.2, "urgent_slack": 0.8},
+        {"kind": "fixed", "offset": 0.5}]))
+    return {"arrival": arrival, "workload": workload,
+            "urgency": urgency, "deadline": deadline}
+
+
+@st.composite
+def scenario_specs(draw, allow_replay=True, single_stream=False):
+    n_streams = 1 if single_stream else draw(st.integers(1, 2))
+    restarts = [{"kind": "none"},
+                {"kind": "at",
+                 "times": [draw(st.floats(0.0, 0.25))]}]
+    if allow_replay:
+        restarts.append({"kind": "replay", "gap": 1e-3})
+    return {
+        "name": "fuzz", "seed": draw(st.integers(0, 10 ** 6)),
+        "horizon": draw(st.floats(0.1, 0.3)),
+        "streams": [draw(stream_specs()) for _ in range(n_streams)],
+        "restarts": draw(st.sampled_from(restarts)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# simulator invariants
+# ---------------------------------------------------------------------------
+
+@fuzz_settings()
+@given(scenario_specs(), st.sampled_from(sorted(SCHEDULERS)))
+def test_fuzz_sim_invariants(spec, sched_name):
+    sc = build_scenario(spec)
+    r = Simulator(_cfg(validate=True), get_scheduler(sched_name)).run(sc)
+    assert not r.truncated
+    assert r.alloc_conflicts == 0
+    assert 0 <= r.finished <= r.total == len(sc.tasks)
+    assert r.deadline_met <= r.finished
+    assert r.urgent_met <= r.urgent_total <= r.total
+    assert r.busy_integral <= EDGE.engines * r.sim_horizon + 1e-9
+    p = r.percentiles or {}
+    if "sched_p50" in p:
+        assert p["sched_p50"] <= p["sched_p99"] <= p["sched_p999"]
+    if sched_name == "immsched":
+        ms = r.matcher_stats
+        tiers = sum(ms[f"sched_tier{i}_decisions"] for i in range(3))
+        assert tiers == ms["sched_matcher_decisions"]
+
+
+@fuzz_settings()
+@given(scenario_specs(allow_replay=False, single_stream=True))
+def test_fuzz_streaming_equals_materialized(spec):
+    mat = build_scenario({**spec, "stream": False})
+    stm = build_scenario({**spec, "stream": True})
+    ra = Simulator(_cfg(validate=True), get_scheduler("immsched")).run(mat)
+    rb = Simulator(_cfg(validate=True), get_scheduler("immsched")).run(stm)
+    assert dataclasses.asdict(ra) == dataclasses.asdict(rb)
+
+
+@fuzz_settings()
+@given(scenario_specs(), st.sampled_from(["immsched", "prema", "cdmsa"]))
+def test_fuzz_heap_loop_equals_legacy(spec, sched_name):
+    ra = Simulator(_cfg(validate=True),
+                   get_scheduler(sched_name)).run(build_scenario(spec))
+    rb = Simulator(_cfg(validate=True),
+                   get_scheduler(sched_name)).run_legacy(
+                       build_scenario(spec))
+    assert dataclasses.asdict(ra) == dataclasses.asdict(rb)
+
+
+@fuzz_settings()
+@given(scenario_specs())
+def test_fuzz_registry_rebuild_deterministic(spec):
+    a, b = build_scenario(spec), build_scenario(spec)
+    assert (a.name, a.horizon, a.restarts) == (b.name, b.horizon,
+                                               b.restarts)
+    assert [_task_rec(t) for t in a.tasks] == \
+        [_task_rec(t) for t in b.tasks]
+    # re-materializing a's tasks into a fresh scenario must not disturb
+    # a's ids (the __post_init__ idempotence fix, under fuzz)
+    ids = [t.task_id for t in a.tasks]
+    if a.tasks:
+        early = dataclasses.replace(a.tasks[0], arrival=0.0, task_id=-1)
+        Scenario(name="merged", tasks=[early] + list(a.tasks),
+                 horizon=a.horizon)
+        assert [t.task_id for t in a.tasks] == ids
+
+
+# ---------------------------------------------------------------------------
+# matcher service: feasibility + snapshot round trips under drift
+# ---------------------------------------------------------------------------
+
+def _planted(seed, n=6, m=12, edge_prob=0.35):
+    key = jax.random.PRNGKey(seed)
+    kq, kt = jax.random.split(key)
+    q = graphs.random_dag(kq, n, edge_prob)
+    return q, graphs.embed_query_in_target(kt, q, m)
+
+
+def _check_mapping(mapping, q, g):
+    M = np.asarray(mapping, dtype=np.int64)
+    assert (M.sum(axis=1) == 1).all()
+    assert (M.sum(axis=0) <= 1).all()
+    covered = M @ g.adj.astype(np.int64) @ M.T
+    assert (covered >= q.adj).all()
+
+
+_SVC = []
+
+
+def _service():
+    if not _SVC:
+        _SVC.append(MatcherService(FUZZ_CFG, persist_dir=False))
+    return _SVC[0]
+
+
+@fuzz_settings()
+@given(st.integers(0, 7), st.integers(0, 3),
+       st.lists(st.booleans(), min_size=16, max_size=16))
+def test_fuzz_service_never_serves_infeasible(qseed, variant, free_bits):
+    """Repeats, drifted targets and drifted engine signatures drive the
+    warm/rebase/swarm tiers; whatever tier answers, a found mapping must
+    be feasible against the ACTUAL problem."""
+    svc = _service()
+    q, g0 = _planted(qseed)
+    g = g0 if variant == 0 else graphs.embed_query_in_target(
+        jax.random.PRNGKey(9000 + 13 * qseed + variant), q, 12)
+    sig = free_engine_signature(free_bits)
+    r = svc.match(q, g, key=jax.random.PRNGKey(31 * qseed + variant),
+                  workload_key=(f"wl{qseed}", sig))
+    if r.found:
+        _check_mapping(r.mapping, q, g)
+    s = svc.stats
+    assert s.found <= s.calls
+    for tier in (s.tier0, s.tier1, s.tier2):
+        assert 0 <= tier.hits <= max(tier.checked, tier.launches)
+
+
+_SNAP = []
+
+
+def _snap_service():
+    if not _SNAP:
+        d = tempfile.mkdtemp(prefix="fuzz-snap-")
+        _SNAP.append(MatcherService(FUZZ_CFG, persist_dir=d,
+                                    aot_cache=False))
+    return _SNAP[0]
+
+
+@fuzz_settings(min(FUZZ_EXAMPLES, 6))
+@given(st.integers(0, 5),
+       st.lists(st.booleans(), min_size=16, max_size=16))
+def test_fuzz_snapshot_roundtrip_mid_run(seed, free_bits):
+    """Snapshots taken mid-fuzz (store growing across examples) restore
+    bitwise into a fresh twin service."""
+    svc = _snap_service()
+    q, g = _planted(seed)
+    svc.match(q, g, key=jax.random.PRNGKey(seed),
+              workload_key=(f"snap{seed}",
+                            free_engine_signature(free_bits)))
+    assert svc.verify_snapshot_roundtrip()
+
+
+# ---------------------------------------------------------------------------
+# real matcher mode: analytic accounting must hold on live launches too
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_fuzz_real_mode_invariants(seed):
+    sc = build_scenario({
+        "name": f"fuzz-real-{seed}", "seed": seed, "horizon": 0.12,
+        "streams": [{
+            "arrival": {"kind": "poisson", "rate_hz": 25},
+            "workload": {"kind": "uniform", "complexity": "simple"},
+            "urgency": {"kind": "bernoulli", "urgent_frac": 0.3},
+        }],
+    })
+    cfg = SimConfig(platform=EDGE, matcher_mode="real",
+                    pso_cfg=FUZZ_CFG, window_stages=2, validate=True)
+    r = Simulator(cfg, get_scheduler("immsched")).run(sc)
+    ms = r.matcher_stats
+    assert r.alloc_conflicts == 0
+    assert sum(ms[f"sched_tier{i}_decisions"] for i in range(3)) == \
+        ms["sched_matcher_decisions"]
+    assert ms["found"] <= ms["calls"]

@@ -1,0 +1,315 @@
+"""Scenario registry: golden-seed byte-stability + composition tests.
+
+The golden digests below were captured from the monolithic pre-registry
+``make_*_scenario`` builders (commit before the registry refactor) over
+every field of every generated TaskSpec (``float.hex()`` for times, so
+the comparison is bitwise). The presets now compose through
+``repro.sched.registry.build_scenario``; these tests prove the registry
+path reproduces the historical output byte-for-byte — plus unit
+coverage for the registry pieces, ``Scenario`` re-materialization
+idempotence, and the previously untested ``make_restart_scenario``
+edge cases (restart at t=0 / past the horizon / duplicated instants /
+on a StreamScenario).
+"""
+import dataclasses
+import hashlib
+
+import pytest
+
+from repro.accel.platform import EDGE
+from repro.sched.registry import (ARRIVALS, RESTARTS, Registry,
+                                  build_scenario)
+from repro.sched.simulator import SimConfig, Simulator
+from repro.sched.schedulers import get_scheduler
+from repro.sched.tasks import (Scenario, StreamScenario,
+                               make_burst_scenario,
+                               make_mixed_burst_scenario,
+                               make_restart_scenario, make_scenario,
+                               make_streaming_scenario)
+
+
+def _task_rec(t):
+    return (t.name, t.workload.name, float(t.arrival).hex(), t.priority,
+            float(t.deadline).hex(), t.urgent, t.task_id)
+
+
+def scenario_digest(sc):
+    """Bitwise digest of a scenario: name, horizon, restarts and every
+    TaskSpec field, with floats serialized via ``hex()``."""
+    if hasattr(sc, "tasks"):
+        tasks = sc.tasks
+        extra = [repr(r) for r in sc.restarts]
+    else:
+        tasks = list(sc.arrivals_iter())
+        extra = [repr(r) for r in sc.restarts]
+        extra.append(repr(sc.expected_arrivals))
+    rec = [sc.name, float(sc.horizon).hex(), extra,
+           [_task_rec(t) for t in tasks]]
+    return hashlib.sha256(repr(rec).encode()).hexdigest()
+
+
+#: (builder thunk, pre-refactor digest) — one entry per legacy builder
+#: shape, defaults and knob-heavy variants both covered.
+GOLDEN = {
+    "poisson": (
+        lambda: make_scenario("simple", rate_hz=25, horizon=0.4, seed=3),
+        "adb5202bae0e1a75f3b4a3c29734107e2b0d7a9ed24831e4504e99c34c8a039b"),
+    "poisson-bursty": (
+        lambda: make_scenario("middle", rate_hz=30, horizon=0.3,
+                              urgent_frac=0.2, deadline_slack=1.5,
+                              urgent_slack=1.0, burst_size=3,
+                              burst_frac=0.4, seed=7),
+        "62e8d7b889b0d188e43f680ba56bacf1e0e6f00c9a870c2391281a7af4f59605"),
+    "burst": (
+        lambda: make_burst_scenario("simple", rate_hz=40, horizon=0.3,
+                                    seed=11),
+        "fba1f2e5abc4364278207efa0ef923f0cc1f89de18b1b2373ce4a180925ad9ea"),
+    "mixed": (
+        lambda: make_mixed_burst_scenario(rate_hz=30, horizon=0.4, seed=5),
+        "0054068c57a663beb89617ceab4ee85a2fc53b2c2cb1ee4ea339f5e10114f889"),
+    "mixed-churn": (
+        lambda: make_mixed_burst_scenario(
+            "simple", "middle", rate_hz=25, horizon=0.3, burst_size=4,
+            hard_frac=0.5, burst_frac=0.6, churn_rate_hz=50.0, seed=9),
+        "d2b866251a8f89b3de63dbd89edf6b03e6a07d81ea7e48da799259fe74f69dfc"),
+    "restart": (
+        lambda: make_restart_scenario(seed=3),
+        "b907c9d804482621985762c6b7fd52c446e238cadd25700cfdb7b41f9ae6d343"),
+    "restart-knobs": (
+        lambda: make_restart_scenario(
+            "middle", rate_hz=25, phase_horizon=0.3, burst_size=3,
+            burst_frac=0.5, urgent_frac=0.2, restart_gap=2e-3, seed=13),
+        "ecd09a00a6b9b2824c74ff4b162c4ea5e7d69105e512a1464f24b4d9e23f5306"),
+    "streaming": (
+        lambda: make_streaming_scenario("simple", rate_hz=50, horizon=0.5,
+                                        seed=2),
+        "6332e8244ac2c27db4cd582fef4ff9d336922f8ad75d745d304fe02d1dd20ad9"),
+    "streaming-bursty": (
+        lambda: make_streaming_scenario("simple", rate_hz=40, horizon=0.4,
+                                        burst_size=5, burst_frac=0.3,
+                                        seed=21),
+        "c07308b96de64492f1f26c658798bf67f8f30276e1d3b852eb13bdb0873e29bf"),
+}
+
+
+@pytest.mark.parametrize("case", sorted(GOLDEN), ids=sorted(GOLDEN))
+def test_golden_seed_byte_stability(case):
+    build, want = GOLDEN[case]
+    assert scenario_digest(build()) == want, \
+        f"{case}: registry output diverged from pre-refactor bytes"
+
+
+def test_explicit_spec_matches_preset_bytes():
+    """A hand-written spec dict through ``build_scenario`` reproduces
+    the same golden bytes as the preset — the registry path IS the
+    preset path, not a parallel implementation."""
+    sc = build_scenario({
+        "name": "middle-burst3", "seed": 7, "horizon": 0.3,
+        "streams": [{
+            "arrival": {"kind": "burst", "rate_hz": 30,
+                        "burst_size": 3, "burst_frac": 0.4},
+            "workload": {"kind": "uniform", "complexity": "middle"},
+            "urgency": {"kind": "bernoulli", "urgent_frac": 0.2},
+            "deadline": {"kind": "slack", "deadline_slack": 1.5,
+                         "urgent_slack": 1.0,
+                         "base_exec_estimate": 5e-3},
+        }],
+    })
+    assert scenario_digest(sc) == GOLDEN["poisson-bursty"][1]
+
+
+def test_explicit_two_stream_spec_matches_mixed_churn_bytes():
+    """The churn phase is just a second registered stream sharing the
+    RNG — composed explicitly it must equal the legacy interleaving."""
+    deadline = {"kind": "slack", "deadline_slack": 2.0,
+                "urgent_slack": 1.25, "base_exec_estimate": 5e-3}
+    sc = build_scenario({
+        "name": "mixed-simple-middle-burst4", "seed": 9, "horizon": 0.3,
+        "streams": [
+            {"arrival": {"kind": "burst", "rate_hz": 25,
+                         "burst_size": 4, "burst_frac": 0.6},
+             "workload": {"kind": "mixed_burst", "easy": "simple",
+                          "hard": "middle", "hard_frac": 0.5,
+                          "burst_size": 4},
+             "urgency": {"kind": "never"}, "deadline": deadline},
+            {"arrival": {"kind": "poisson", "rate_hz": 50.0},
+             "workload": {"kind": "uniform", "complexity": "simple"},
+             "urgency": {"kind": "always"}, "deadline": deadline},
+        ],
+    })
+    assert scenario_digest(sc) == GOLDEN["mixed-churn"][1]
+
+
+def test_preset_delegation():
+    sc = build_scenario({"preset": "poisson",
+                         "args": {"complexity": "simple", "rate_hz": 25,
+                                  "horizon": 0.4, "seed": 3}})
+    assert scenario_digest(sc) == GOLDEN["poisson"][1]
+    with pytest.raises(ValueError, match="unknown scenario preset"):
+        build_scenario({"preset": "nope"})
+    with pytest.raises(ValueError, match="alongside 'preset'"):
+        build_scenario({"preset": "poisson", "horizon": 1.0})
+
+
+# ---------------------------------------------------------------------------
+# registry machinery
+# ---------------------------------------------------------------------------
+
+def test_registry_names_and_errors():
+    assert {"poisson", "burst", "trace"} <= set(ARRIVALS.names())
+    assert {"none", "at", "replay"} <= set(RESTARTS.names())
+    with pytest.raises(ValueError, match="unknown arrival"):
+        ARRIVALS.build({"kind": "weibull"}, None, 1.0)
+    with pytest.raises(ValueError, match="needs a 'kind'"):
+        ARRIVALS.build({"rate_hz": 5.0}, None, 1.0)
+    reg = Registry("demo")
+
+    @reg.register("x")
+    def _x():
+        return 1
+    with pytest.raises(ValueError, match="duplicate"):
+        reg.register("x")(lambda: 2)
+
+
+def test_trace_arrival_and_named_workload():
+    sc = build_scenario({
+        "name": "trace", "horizon": 0.2,
+        "streams": [{
+            "arrival": {"kind": "trace", "times": [0.0, 0.05, 0.05, 0.5],
+                        "counts": [1, 2, 1, 1]},
+            "workload": {"kind": "named", "name": "mobilenetv2"},
+            "deadline": {"kind": "fixed", "offset": 1.0},
+        }],
+    })
+    # 0.5 >= horizon dropped; counts honored; no RNG consumed at all
+    assert [t.arrival for t in sc.tasks] == [0.0, 0.05, 0.05, 0.05]
+    assert all(t.name == "mobilenetv2" and not t.urgent
+               and t.deadline == t.arrival + 1.0 for t in sc.tasks)
+    with pytest.raises(ValueError, match="nondecreasing"):
+        build_scenario({
+            "horizon": 1.0,
+            "streams": [{
+                "arrival": {"kind": "trace", "times": [0.2, 0.1]},
+                "workload": {"kind": "named", "name": "mobilenetv2"},
+            }]})
+
+
+def test_streaming_spec_is_deterministic_and_rejects_replay():
+    spec = {"horizon": 0.3, "seed": 4, "stream": True,
+            "streams": [{
+                "arrival": {"kind": "poisson", "rate_hz": 40},
+                "workload": {"kind": "uniform", "complexity": "simple"},
+                "urgency": {"kind": "bernoulli", "urgent_frac": 0.3},
+            }]}
+    sc = build_scenario(spec)
+    assert isinstance(sc, StreamScenario)
+    a = [_task_rec(t) for t in sc.arrivals_iter()]
+    b = [_task_rec(t) for t in sc.arrivals_iter()]
+    assert a == b and a
+    with pytest.raises(ValueError, match="cannot back a streaming"):
+        build_scenario({**spec, "restarts": {"kind": "replay"}})
+
+
+# ---------------------------------------------------------------------------
+# Scenario re-materialization idempotence (the __post_init__ fix)
+# ---------------------------------------------------------------------------
+
+def test_scenario_rematerialization_is_idempotent():
+    base = make_scenario("simple", rate_hz=25, horizon=0.4, seed=3)
+    before = [(id(t), t.task_id) for t in base.tasks]
+    # same tasks, same order: ids already match -> objects pass through
+    again = Scenario(name="again", tasks=list(base.tasks),
+                     horizon=base.horizon)
+    assert [id(t) for t in again.tasks] == [i for i, _ in before]
+    assert [(id(t), t.task_id) for t in base.tasks] == before
+
+
+def test_scenario_never_renumbers_foreign_tasks():
+    """Building a new scenario out of another scenario's tasks must not
+    corrupt the donor's task ids (the silent-mutation regression)."""
+    base = make_scenario("simple", rate_hz=25, horizon=0.4, seed=3)
+    donor_ids = [t.task_id for t in base.tasks]
+    early = dataclasses.replace(base.tasks[0], arrival=0.0, task_id=-1)
+    merged = Scenario(name="merged", tasks=[early] + list(base.tasks),
+                      horizon=base.horizon)
+    n = len(base.tasks)
+    assert [t.task_id for t in merged.tasks] == list(range(n + 1))
+    # donor untouched: shifted tasks were renumbered on COPIES
+    assert [t.task_id for t in base.tasks] == donor_ids
+    assert not any(m is t for m in merged.tasks[1:]
+                   for t in (base.tasks[0],))
+
+
+# ---------------------------------------------------------------------------
+# make_restart_scenario / restart-schedule edge cases
+# ---------------------------------------------------------------------------
+
+def _cfg(**kw):
+    return SimConfig(platform=EDGE, matcher_mode="analytic", **kw)
+
+
+def _trace_restart_spec(restarts, horizon=0.2, stream=False):
+    return {
+        "name": "restart-edge", "horizon": horizon, "seed": 0,
+        "stream": stream,
+        "streams": [{
+            "arrival": {"kind": "trace", "times": [0.0, 0.02, 0.05]}
+            if not stream else {"kind": "poisson", "rate_hz": 40},
+            "workload": {"kind": "named", "name": "mobilenetv2"},
+            "deadline": {"kind": "fixed", "offset": 1.0},
+        }],
+        "restarts": {"kind": "at", "times": restarts},
+    }
+
+
+def test_restart_at_time_zero_hits_fresh_scheduler():
+    sc = build_scenario(_trace_restart_spec([0.0]))
+    r = Simulator(_cfg(validate=True), get_scheduler("immsched")).run(sc)
+    assert r.matcher_stats["restart_count"] == 1
+    assert r.finished == r.total == 3
+
+
+def test_restart_past_horizon_never_fires():
+    sc = build_scenario(_trace_restart_spec([10.0]))
+    r = Simulator(_cfg(validate=True), get_scheduler("immsched")).run(sc)
+    assert r.matcher_stats["restart_count"] == 0
+    assert r.finished == r.total == 3
+
+
+def test_duplicate_restart_instants_fire_individually():
+    sc = build_scenario(_trace_restart_spec([0.03, 0.03]))
+    r = Simulator(_cfg(validate=True), get_scheduler("immsched")).run(sc)
+    assert r.matcher_stats["restart_count"] == 2
+    # heap and legacy loops must agree on the double-kill bitwise
+    sc2 = build_scenario(_trace_restart_spec([0.03, 0.03]))
+    r2 = Simulator(_cfg(validate=True),
+                   get_scheduler("immsched")).run_legacy(sc2)
+    assert dataclasses.asdict(r) == dataclasses.asdict(r2)
+
+
+def test_restarts_on_stream_scenario_match_materialized():
+    stream = build_scenario(_trace_restart_spec([0.1], stream=True))
+    assert isinstance(stream, StreamScenario) and stream.restarts == [0.1]
+    mat = Scenario(name=stream.name,
+                   tasks=list(stream.arrivals_iter()),
+                   horizon=stream.horizon, restarts=list(stream.restarts))
+    ra = Simulator(_cfg(validate=True), get_scheduler("immsched")).run(stream)
+    rb = Simulator(_cfg(validate=True), get_scheduler("immsched")).run(mat)
+    assert ra.matcher_stats["restart_count"] == 1
+    assert dataclasses.asdict(ra) == dataclasses.asdict(rb)
+
+
+def test_restart_preset_replays_phase_one_exactly():
+    sc = make_restart_scenario("simple", rate_hz=30, phase_horizon=0.2,
+                               seed=5)
+    kill_at = sc.restarts[0]
+    n = len(sc.tasks) // 2
+    assert len(sc.tasks) == 2 * n
+    phase1, phase2 = sc.tasks[:n], sc.tasks[n:]
+    for a, b in zip(phase1, phase2):
+        assert b.arrival == a.arrival + kill_at
+        assert b.deadline == a.deadline + kill_at
+        assert (a.name, a.workload.name, a.urgent) == \
+            (b.name, b.workload.name, b.urgent)
+    assert all(t.arrival < kill_at for t in phase1)
+    assert all(t.arrival >= kill_at for t in phase2)
